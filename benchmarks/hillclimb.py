@@ -1,0 +1,95 @@
+"""Hillclimb runner: re-lower one cell with run/config overrides and diff
+the roofline terms against the baseline JSON.
+
+  PYTHONPATH=src:. python -m benchmarks.hillclimb --arch qwen2-7b \
+      --shape train_4k --tag attnseq --set attn_seq_shard=true
+
+Writes results/hillclimb/<arch>__<shape>__<tag>.json (same schema as the
+dry-run) and prints a before/after table of the three terms — the artifact
+EXPERIMENTS.md §Perf records per iteration.
+"""
+
+# device-count override must precede any jax import
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+
+def parse_val(v: str):
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="run-dict override key=val (repeatable)")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--baseline-dir", default="results/dryrun")
+    ap.add_argument("--out", default="results/hillclimb")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+    from benchmarks.roofline import cell_roofline
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+    step_overrides = {"run_overrides": overrides} if overrides else {}
+    if args.accum is not None:
+        step_overrides["accum"] = args.accum
+
+    os.makedirs(args.out, exist_ok=True)
+    hlo_dir = os.path.join(args.out, "hlo")
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   hlo_dir=hlo_dir, step_overrides=step_overrides)
+    sfx = "mp" if args.multi_pod else "sp"
+    # run_cell writes HLO under arch__shape__sfx; rename to include the tag
+    src = os.path.join(hlo_dir, f"{args.arch}__{args.shape}__{sfx}.hlo.gz")
+    dst = os.path.join(hlo_dir, f"{args.arch}__{args.shape}__{sfx}__{args.tag}.hlo.gz")
+    if os.path.exists(src):
+        os.replace(src, dst)
+    out_path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{sfx}__{args.tag}.json"
+    )
+    rec["overrides"] = overrides
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    new = cell_roofline(rec)
+    base_path = os.path.join(
+        args.baseline_dir, f"{args.arch}__{args.shape}__{sfx}.json"
+    )
+    with open(base_path) as f:
+        base = cell_roofline(json.load(f))
+
+    print(f"\n=== {args.arch} × {args.shape} × {sfx} | variant '{args.tag}' "
+          f"{overrides} ===")
+    print(f"{'term':<14}{'baseline':>12}{'variant':>12}{'delta':>9}")
+    for key in ("compute_s", "memory_s", "collective_s", "roofline_frac"):
+        b, n = base[key], new[key]
+        d = (n - b) / b * 100 if b else float("nan")
+        print(f"{key:<14}{b:>12.4f}{n:>12.4f}{d:>+8.1f}%")
+    print(f"bound: {base['bound']} -> {new['bound']}")
+
+
+if __name__ == "__main__":
+    main()

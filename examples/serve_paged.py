@@ -1,0 +1,49 @@
+"""Batched serving with the wait-free paged-KV manager (the paper's graph
+as a production page table).
+
+    PYTHONPATH=src python examples/serve_paged.py [--arch mixtral-8x7b]
+
+Submits a burst of prompts, runs continuous batching to completion, then
+simulates a host failure: a replacement host replays the deterministic op
+log and must reconstruct byte-identical page tables.
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.models import LM
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="mixtral-8x7b")
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = LM(cfg).init(jax.random.key(0))
+    eng = ServingEngine(cfg, params, max_batch=4, max_len=96, page_size=8)
+
+    rng = np.random.default_rng(1)
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 20))
+        shape = (plen,) if cfg.n_codebooks == 1 else (plen, cfg.n_codebooks)
+        eng.submit(Request(
+            id=i, prompt=rng.integers(0, cfg.vocab, shape).astype(np.int32),
+            max_new_tokens=8, temperature=0.7,
+        ))
+    done = eng.run()
+    print(f"[{cfg.name}] served {len(done)} requests in {eng.ticks} ticks")
+    print(f"  sample completion (req 0): {done[0].generated}")
+
+    twin = eng.failover()
+    print(f"  failover: replayed {len(eng.pages.op_log)} op batches -> "
+          f"identical page tables ✓ (pages free: {len(twin.free)})")
+
+
+if __name__ == "__main__":
+    main()

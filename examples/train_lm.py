@@ -1,0 +1,52 @@
+"""End-to-end LM training on CPU: real data pipeline, sharded step,
+async checkpoints, kill-safe resume.
+
+    PYTHONPATH=src python examples/train_lm.py                # ~25M params
+    PYTHONPATH=src python examples/train_lm.py --params-100m  # ~100M params
+
+Loss should fall from ~ln(vocab) toward the Zipf+motif entropy floor within
+a few hundred steps.  Re-running the same command resumes from the latest
+checkpoint (delete --ckpt-dir to restart).
+"""
+
+import argparse
+
+from repro.launch.train import TrainRunner, make_mesh
+from repro.models.config import ArchConfig
+
+
+def nano_config(big: bool) -> ArchConfig:
+    if big:  # ~100M params
+        return ArchConfig(
+            name="nano-100m", family="dense", n_layers=12, d_model=768,
+            n_heads=12, n_kv_heads=4, d_ff=2048, vocab=16384, dtype="float32",
+        )
+    return ArchConfig(  # ~25M params
+        name="nano-25m", family="dense", n_layers=8, d_model=384,
+        n_heads=8, n_kv_heads=4, d_ff=1024, vocab=8192, dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--params-100m", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = nano_config(args.params_100m)
+    runner = TrainRunner(
+        cfg, make_mesh("1x1"), ckpt_dir=args.ckpt_dir,
+        batch=args.batch, seq=args.seq,
+    )
+    print(f"[{cfg.name}] {runner.init_or_restore()} @ step {runner.step}")
+    losses = runner.train(args.steps, log_every=10, save_every=100)
+    first, last = losses[0][1], losses[-1][1]
+    print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({'improved' if last < first else 'NO IMPROVEMENT — check setup'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Fault-tolerant checkpointing.
+
+Contract:
+  * **atomic** — a checkpoint is a directory written under a temp name and
+    renamed into place; the manifest is written last, so a crash mid-write
+    can never leave a checkpoint that ``latest_step`` would pick up;
+  * **async** — ``save_async`` snapshots device arrays to host memory
+    synchronously (cheap) and does the disk I/O on a background thread, so
+    the train loop resumes immediately; ``wait()`` joins before the next
+    save or on exit;
+  * **mesh-agnostic / elastic** — arrays are stored logically-complete
+    (gathered); ``restore`` re-shards onto whatever sharding tree the caller
+    provides, so a run saved on mesh (2,2) restores bit-exactly on (4,1) or
+    (1,4) (tested in tests/test_fault_tolerance.py).  At real scale the
+    gather becomes a per-shard write keyed by logical coordinates — same
+    layout contract, different I/O path;
+  * **self-validating** — every payload file carries a checksum in the
+    manifest; ``latest_step`` skips corrupt/partial checkpoints (simulated
+    node failure mid-write in the tests).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        # copy=True is load-bearing: np.asarray can return a VIEW of the
+        # device buffer, and the train loop donates params/opt — the next
+        # step would overwrite the buffer while the async writer is still
+        # serializing it (observed as a flaky kill/resume mismatch).
+        flat[key] = np.array(leaf, copy=True)
+    return flat
+
+
+class CheckpointStore:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- discovery -----------------------------------------------------------
+    def steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and self._valid(os.path.join(self.dir, name)):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def _valid(self, path: str) -> bool:
+        mpath = os.path.join(path, "manifest.json")
+        if not os.path.exists(mpath):
+            return False
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+            for fname, digest in manifest["checksums"].items():
+                fpath = os.path.join(path, fname)
+                if not os.path.exists(fpath):
+                    return False
+                with open(fpath, "rb") as f:
+                    if hashlib.sha256(f.read()).hexdigest() != digest:
+                        return False
+            return True
+        except (json.JSONDecodeError, KeyError, OSError):
+            return False
+
+    # -- save ------------------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[Dict[str, Any]] = None):
+        self.wait()
+        flat = _flatten(tree)  # device->host gather happens here
+        self._write(step, flat, extra or {})
+
+    def save_async(self, step: int, tree, extra: Optional[Dict[str, Any]] = None):
+        self.wait()
+        flat = _flatten(tree)  # snapshot now; I/O in background
+        self._thread = threading.Thread(
+            target=self._write, args=(step, flat, extra or {}), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray], extra: Dict):
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=self.dir)
+        try:
+            payload = os.path.join(tmp, "arrays.npz")
+            np.savez(payload, **flat)
+            with open(payload, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            manifest = {
+                "step": step,
+                "extra": extra,
+                "checksums": {"arrays.npz": digest},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------------
+    def restore(self, step: int, like_tree, shardings=None):
+        """Restore into the structure of ``like_tree``; optionally re-shard
+        with a matching tree of ``jax.sharding.Sharding`` (elastic resume)."""
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            flat = {k: data[k] for k in data.files}
+
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+        leaves = []
+        for path_elems, like in paths:
+            key = "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path_elems
+            )
+            arr = flat[key]
+            leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings
+            )
+        else:
+            tree = jax.tree.map(
+                lambda a, l: jax.numpy.asarray(a, dtype=l.dtype), tree, like_tree
+            )
+        return tree
+
+    def extra(self, step: int) -> Dict:
+        path = os.path.join(self.dir, f"step_{step:010d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)["extra"]

@@ -1,0 +1,45 @@
+"""repro.core — the paper's wait-free concurrent unbounded graph, in JAX.
+
+Public API:
+  * :class:`repro.core.graph.WaitFreeGraph` — unbounded graph, six ops,
+    batched apply, growth, ``waitfree`` or ``fpsp`` engines.
+  * :func:`repro.core.engine.apply_batch` — the wait-free combine pass.
+  * :func:`repro.core.fastpath.apply_batch_fpsp` — fast-path-slow-path.
+  * :mod:`repro.core.baselines` — coarse / serial / lock-free comparisons.
+  * :mod:`repro.core.oracle` — sequential specification (ground truth).
+"""
+
+from .graph import WaitFreeGraph
+from .oracle import SequentialGraph, run_sequential
+from .types import (
+    OP_ADD_EDGE,
+    OP_ADD_VERTEX,
+    OP_CONTAINS_EDGE,
+    OP_CONTAINS_VERTEX,
+    OP_NOP,
+    OP_REMOVE_EDGE,
+    OP_REMOVE_VERTEX,
+    ApplyResult,
+    GraphState,
+    OpBatch,
+    make_batch,
+    make_state,
+)
+
+__all__ = [
+    "WaitFreeGraph",
+    "SequentialGraph",
+    "run_sequential",
+    "GraphState",
+    "OpBatch",
+    "ApplyResult",
+    "make_batch",
+    "make_state",
+    "OP_NOP",
+    "OP_ADD_VERTEX",
+    "OP_REMOVE_VERTEX",
+    "OP_CONTAINS_VERTEX",
+    "OP_ADD_EDGE",
+    "OP_REMOVE_EDGE",
+    "OP_CONTAINS_EDGE",
+]

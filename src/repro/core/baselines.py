@@ -1,0 +1,152 @@
+"""Baseline engines matching the paper's comparison set (Fig. 4).
+
+Paper baseline        -> dataflow analogue here
+---------------------------------------------------------------------------
+coarse lock [7]       -> ``apply_coarse``: host loop, one device round-trip
+                         per op — global serialization.
+HoH / lazy locks [6,7]-> ``apply_serial``: one ``lax.scan`` step per op
+                         inside a single jit — device-side serialization with
+                         per-op locate (the hand-over-hand walk); marked bits
+                         give lazy-list logical deletion.
+lock-free [4]         -> ``apply_lockfree``: optimistic vectorized rounds;
+                         per conflict group the minimum-phase op "wins the
+                         CAS", losers retry next round.  System-wide progress
+                         every round, but no per-op bound (lock-freedom).
+wait-free (paper)     -> ``repro.core.engine.apply_batch``.
+fast-path-slow-path   -> ``repro.core.fastpath.apply_batch_fpsp``.
+
+All five produce results exactly equal to the sequential oracle in phase
+order; they differ in *how* (and in how many bounded steps) they get there —
+which is precisely what the paper's Fig. 4 measures.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fastpath import _fast_apply
+from .hashing import hash_edge, hash_vertex
+from .types import (
+    OP_ADD_EDGE,
+    OP_ADD_VERTEX,
+    OP_CONTAINS_EDGE,
+    OP_CONTAINS_VERTEX,
+    OP_REMOVE_EDGE,
+    OP_REMOVE_VERTEX,
+    ApplyResult,
+    GraphState,
+    OpBatch,
+)
+
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# lock-free: optimistic rounds, min-phase wins each conflict group
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def apply_lockfree(state: GraphState, batch: OpBatch) -> ApplyResult:
+    op, u, v, phase = batch.op, batch.u, batch.v, batch.phase
+    n = op.shape[0]
+    nb = max(2 * n, 64)
+
+    is_vop = (op == OP_ADD_VERTEX) | (op == OP_REMOVE_VERTEX) | (op == OP_CONTAINS_VERTEX)
+    is_eop = (op == OP_ADD_EDGE) | (op == OP_REMOVE_EDGE) | (op == OP_CONTAINS_EDGE)
+    real = is_vop | is_eop
+
+    hv_u = hash_vertex(u, nb)
+    hv_v = hash_vertex(v, nb)
+    he = hash_edge(u, v, nb)
+
+    def cond(carry):
+        _, _, pending, _, rounds = carry
+        return jnp.any(pending)
+
+    def body(carry):
+        st, success, pending, overflow, rounds = carry
+
+        # min pending phase per vertex bucket (vertex ops + edge endpoints)
+        vmin = jnp.full((nb,), _INT32_MAX, jnp.int32)
+        pv = pending & is_vop
+        pe = pending & is_eop
+        vmin = vmin.at[jnp.where(pv, hv_u, 0)].min(jnp.where(pv, phase, _INT32_MAX))
+        vmin = vmin.at[jnp.where(pe, hv_u, 0)].min(jnp.where(pe, phase, _INT32_MAX))
+        vmin = vmin.at[jnp.where(pe, hv_v, 0)].min(jnp.where(pe, phase, _INT32_MAX))
+        emin = jnp.full((nb,), _INT32_MAX, jnp.int32)
+        emin = emin.at[jnp.where(pe, he, 0)].min(jnp.where(pe, phase, _INT32_MAX))
+
+        # an op "wins its CAS" iff it is the min across every bucket it touches
+        v_win = pv & (vmin[hv_u] == phase)
+        e_win = pe & (vmin[hv_u] >= phase) & (vmin[hv_v] >= phase) & (emin[he] == phase)
+        # (>= because the edge op's own phase is in those buckets; winning
+        # requires no *lower* phase there)
+        winner = v_win | e_win
+
+        st, win_success, over = _fast_apply(st, batch, winner)
+        success = jnp.where(winner, win_success, success)
+        pending = pending & ~winner
+        return (st, success, pending, overflow | over, rounds + 1)
+
+    init = (state, jnp.zeros((n,), bool), real, jnp.array(False), jnp.int32(0))
+    st, success, pending, overflow, rounds = jax.lax.while_loop(cond, body, init)
+    stats = jnp.stack([rounds, jnp.int32(0), jnp.int32(0), jnp.int32(0)])
+    return ApplyResult(state=st, success=success, ok=~overflow, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# serialized: one op per lax.scan step (HoH / lazy locking analogue)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def apply_serial(state: GraphState, batch: OpBatch) -> ApplyResult:
+    def step(st, xs):
+        op1, u1, v1, ph1 = xs
+        one = OpBatch(op=op1[None], u=u1[None], v=v1[None], phase=ph1[None])
+        st, succ, over = _fast_apply(st, one, jnp.ones((1,), bool))
+        return st, (succ[0], over)
+
+    state, (success, overs) = jax.lax.scan(
+        step, state, (batch.op, batch.u, batch.v, batch.phase)
+    )
+    stats = jnp.zeros((4,), jnp.int32)
+    return ApplyResult(state=state, success=success, ok=~jnp.any(overs), stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# coarse: host-side loop, one device call per op (global lock analogue)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _apply_one(state: GraphState, op, u, v, phase):
+    one = OpBatch(op=op[None], u=u[None], v=v[None], phase=phase[None])
+    st, succ, over = _fast_apply(state, one, jnp.ones((1,), bool))
+    return st, succ[0], over
+
+
+def apply_coarse(state: GraphState, batch: OpBatch) -> ApplyResult:
+    n = batch.size
+    success = np.zeros((n,), bool)
+    overflow = False
+    order = np.argsort(np.asarray(batch.phase), kind="stable")
+    for i in order:
+        state, s, over = _apply_one(
+            state, batch.op[i], batch.u[i], batch.v[i], batch.phase[i]
+        )
+        success[i] = bool(s)
+        overflow = overflow or bool(over)
+    return ApplyResult(
+        state=state,
+        success=jnp.asarray(success),
+        ok=jnp.array(not overflow),
+        stats=jnp.zeros((4,), jnp.int32),
+    )
+
+
+ENGINES = {
+    "coarse": apply_coarse,
+    "serial": apply_serial,
+    "lockfree": apply_lockfree,
+}

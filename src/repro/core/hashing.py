@@ -1,0 +1,44 @@
+"""Hash mixing and probe sequences for the open-addressing tables.
+
+The paper walks sorted linked lists (``WFLocateVertex`` / ``WFLocateEdge``);
+on a vector machine pointer chasing is hostile, so locate becomes a bounded
+linear-probe over a power-of-two table.  The probe bound (MAX_PROBES) is what
+keeps locate wait-free: a chain longer than the bound trips table growth
+instead of spinning.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Finalizer from MurmurHash3 (public domain), on uint32 lanes."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_vertex(key: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    """Home slot for a vertex key in a power-of-two table."""
+    return (_mix32(key) & jnp.uint32(capacity - 1)).astype(jnp.int32)
+
+
+def hash_edge(u: jnp.ndarray, v: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    """Home slot for an edge key pair (u, v); order-sensitive (directed)."""
+    h = _mix32(u.astype(jnp.uint32) * jnp.uint32(0x9E3779B9) + _mix32(v))
+    return (h & jnp.uint32(capacity - 1)).astype(jnp.int32)
+
+
+def probe_slot(home: jnp.ndarray, step: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    """Triangular probing: home + step*(step+1)/2 mod capacity.
+
+    For power-of-two capacities triangular probing visits every slot, like
+    linear probing, but with better clustering behaviour.
+    """
+    off = (step * (step + 1)) // 2
+    return (home + off) & (capacity - 1)

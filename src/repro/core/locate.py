@@ -1,0 +1,159 @@
+"""Bounded-probe locate and scatter-claim insertion for the hash tables.
+
+``locate_*`` is the engine's analogue of the paper's ``WFLocateVertex`` /
+``WFLocateEdge``: it returns, for every query key, either the slot holding the
+key (live or tombstone — Harris "marked" nodes stay physically present until
+compaction) or the first empty slot of its probe chain (the insert
+candidate).  The probe chain is capped at MAX_PROBES — a locate that would
+exceed the cap sets ``overflow`` and the host grows the table, which is what
+keeps locate bounded (wait-free) instead of spinning.
+
+``claim_slots`` implements deterministic parallel insertion: every pending key
+scatters its priority into its candidate slot, winners are read back, losers
+re-probe.  Rounds are bounded by MAX_INSERT_ROUNDS; exceeding the bound sets
+``overflow`` (host grows and retries the whole batch transactionally).
+
+A Pallas TPU kernel implementing the same probe loop with VMEM-tiled query
+blocks lives in ``repro.kernels.hash_probe``; this module is the portable
+reference used on CPU and in dry-runs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import hash_edge, hash_vertex, probe_slot
+from .types import EMPTY_KEY, MAX_INSERT_ROUNDS, MAX_PROBES
+
+
+class LocateResult(NamedTuple):
+    slot: jnp.ndarray      # i32[n] slot holding the key, or -1
+    found: jnp.ndarray     # bool[n]
+    insert_slot: jnp.ndarray  # i32[n] first empty slot on the chain, or -1
+    overflow: jnp.ndarray  # bool[] any probe chain exhausted
+
+
+def _locate(home: jnp.ndarray, match_at, capacity: int, active: jnp.ndarray) -> LocateResult:
+    """Generic bounded probe. ``match_at(slot) -> (is_match, is_empty)``."""
+    n = home.shape[0]
+    slot0 = jnp.full((n,), -1, jnp.int32)
+
+    def body(step, carry):
+        found_slot, empty_slot = carry
+        pending = (found_slot < 0) & (empty_slot < 0) & active
+        s = probe_slot(home, jnp.int32(step), capacity)
+        is_match, is_empty = match_at(s)
+        found_slot = jnp.where(pending & is_match, s, found_slot)
+        empty_slot = jnp.where(pending & is_empty & ~is_match, s, empty_slot)
+        return (found_slot, empty_slot)
+
+    found_slot, empty_slot = jax.lax.fori_loop(0, MAX_PROBES, body, (slot0, slot0))
+    overflow = jnp.any(active & (found_slot < 0) & (empty_slot < 0))
+    return LocateResult(found_slot, found_slot >= 0, empty_slot, overflow)
+
+
+def locate_vertices(v_key: jnp.ndarray, keys: jnp.ndarray, active: jnp.ndarray) -> LocateResult:
+    cap = v_key.shape[0]
+    home = hash_vertex(keys, cap)
+
+    def match_at(s):
+        k = v_key[s]
+        return (k == keys) & active, k == EMPTY_KEY
+
+    return _locate(home, match_at, cap, active)
+
+
+def locate_edges(
+    e_key_u: jnp.ndarray, e_key_v: jnp.ndarray, us: jnp.ndarray, vs: jnp.ndarray, active: jnp.ndarray
+) -> LocateResult:
+    cap = e_key_u.shape[0]
+    home = hash_edge(us, vs, cap)
+
+    def match_at(s):
+        ku = e_key_u[s]
+        kv = e_key_v[s]
+        return ((ku == us) & (kv == vs)) & active, ku == EMPTY_KEY
+
+    return _locate(home, match_at, cap, active)
+
+
+def _claim_slots(
+    key_cols: Tuple[jnp.ndarray, ...],
+    query_cols: Tuple[jnp.ndarray, ...],
+    home_of,
+    want: jnp.ndarray,
+) -> Tuple[Tuple[jnp.ndarray, ...], jnp.ndarray, jnp.ndarray]:
+    """Insert unique new keys into empty slots, deterministically.
+
+    key_cols:   the table's key column(s) — (v_key,) or (e_key_u, e_key_v).
+    query_cols: matching per-query key column(s).
+    home_of(query_cols, cap) -> i32[n] home slots.
+    want: bool[n] — which query indices need insertion (their keys must be
+          mutually distinct and absent from the table).
+
+    Returns (updated key_cols, slots i32[n] (-1 where not wanted/failed),
+    overflow flag).  The claim is priority-ordered by query index, so the
+    outcome is deterministic and identical on every device.
+    """
+    n = want.shape[0]
+    cap = key_cols[0].shape[0]
+    slots0 = jnp.full((n,), -1, jnp.int32)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    int_max = jnp.iinfo(jnp.int32).max
+    home = home_of(query_cols, cap)
+
+    def cond(carry):
+        _, _, pending, rounds = carry
+        return jnp.any(pending) & (rounds < MAX_INSERT_ROUNDS)
+
+    def body(carry):
+        cols, slots, pending, rounds = carry
+        first_col = cols[0]
+
+        # bounded probe for the first empty slot on each pending chain
+        def probe_body(step, empty_slot):
+            s = probe_slot(home, jnp.int32(step), cap)
+            is_empty = first_col[s] == EMPTY_KEY
+            take = pending & (empty_slot < 0) & is_empty
+            return jnp.where(take, s, empty_slot)
+
+        cand = jax.lax.fori_loop(0, MAX_PROBES, probe_body, jnp.full((n,), -1, jnp.int32))
+        has_cand = pending & (cand >= 0)
+        safe_cand = jnp.where(has_cand, cand, 0)
+
+        # scatter-claim: lowest query index wins each contended slot
+        claim = jnp.full((cap,), int_max, jnp.int32)
+        claim = claim.at[safe_cand].min(jnp.where(has_cand, idx, int_max))
+        winner = has_cand & (claim[safe_cand] == idx)
+
+        # winners write their key column(s); mode="drop" ignores losers (idx cap)
+        wslot = jnp.where(winner, cand, cap)
+        cols = tuple(
+            col.at[wslot].set(qcol, mode="drop") for col, qcol in zip(cols, query_cols)
+        )
+        slots = jnp.where(winner, cand, slots)
+        pending = pending & ~winner
+        return (cols, slots, pending, rounds + 1)
+
+    cols, slots, pending, _ = jax.lax.while_loop(
+        cond, body, (key_cols, slots0, want, jnp.int32(0))
+    )
+    overflow = jnp.any(pending)
+    return cols, slots, overflow
+
+
+def claim_vertex_slots(v_key, query_keys, want):
+    cols, slots, overflow = _claim_slots(
+        (v_key,), (query_keys,), lambda q, cap: hash_vertex(q[0], cap), want
+    )
+    return cols[0], slots, overflow
+
+
+def claim_edge_slots(e_key_u, e_key_v, qu, qv, want):
+    cols, slots, overflow = _claim_slots(
+        (e_key_u, e_key_v), (qu, qv), lambda q, cap: hash_edge(q[0], q[1], cap), want
+    )
+    return cols[0], cols[1], slots, overflow

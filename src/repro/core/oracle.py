@@ -1,0 +1,115 @@
+"""Pure-Python sequential oracle for the graph's sequential specification.
+
+This is the ground truth the concurrent engine is validated against
+(linearizability: the engine's per-op results must equal the oracle's results
+for the phase-ordered sequential application).
+
+Semantics follow the paper's §2.1 on the *abstract* graph G=(V, E):
+
+* ``remove_vertex(u)`` removes u and (abstractly) all incident edges — any
+  later ``contains_edge``/``remove_edge`` touching u fails because u is not
+  present, and re-adding u yields a vertex with *no* incident edges.  (The
+  paper realizes this with fresh VNode allocation + endpoint revalidation,
+  Fig. 3; we realize it with incarnation counters.)
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence, Set, Tuple
+
+from .types import (
+    OP_ADD_EDGE,
+    OP_ADD_VERTEX,
+    OP_CONTAINS_EDGE,
+    OP_CONTAINS_VERTEX,
+    OP_NOP,
+    OP_REMOVE_EDGE,
+    OP_REMOVE_VERTEX,
+)
+
+
+class SequentialGraph:
+    """Reference implementation: a plain sequential directed graph."""
+
+    def __init__(self) -> None:
+        self.vertices: Set[int] = set()
+        self.edges: Set[Tuple[int, int]] = set()
+
+    # -- the six operations (paper §2.1) --------------------------------
+    def add_vertex(self, u: int) -> bool:
+        if u in self.vertices:
+            return False
+        self.vertices.add(u)
+        return True
+
+    def remove_vertex(self, u: int) -> bool:
+        if u not in self.vertices:
+            return False
+        self.vertices.discard(u)
+        self.edges = {(a, b) for (a, b) in self.edges if a != u and b != u}
+        return True
+
+    def contains_vertex(self, u: int) -> bool:
+        return u in self.vertices
+
+    def add_edge(self, u: int, v: int) -> bool:
+        if u not in self.vertices or v not in self.vertices:
+            return False
+        if (u, v) in self.edges:
+            return False
+        self.edges.add((u, v))
+        return True
+
+    def remove_edge(self, u: int, v: int) -> bool:
+        if u not in self.vertices or v not in self.vertices:
+            return False
+        if (u, v) not in self.edges:
+            return False
+        self.edges.discard((u, v))
+        return True
+
+    def contains_edge(self, u: int, v: int) -> bool:
+        if u not in self.vertices or v not in self.vertices:
+            return False
+        return (u, v) in self.edges
+
+    def apply(self, op: int, u: int, v: int) -> bool:
+        if op == OP_ADD_VERTEX:
+            return self.add_vertex(u)
+        if op == OP_REMOVE_VERTEX:
+            return self.remove_vertex(u)
+        if op == OP_CONTAINS_VERTEX:
+            return self.contains_vertex(u)
+        if op == OP_ADD_EDGE:
+            return self.add_edge(u, v)
+        if op == OP_REMOVE_EDGE:
+            return self.remove_edge(u, v)
+        if op == OP_CONTAINS_EDGE:
+            return self.contains_edge(u, v)
+        if op == OP_NOP:
+            return False
+        raise ValueError(f"unknown op {op}")
+
+
+def run_sequential(
+    ops: Sequence[int],
+    us: Sequence[int],
+    vs: Sequence[int],
+    phases: Sequence[int] | None = None,
+    graph: SequentialGraph | None = None,
+) -> Tuple[List[bool], SequentialGraph]:
+    """Apply a batch sequentially in increasing phase order.
+
+    Returns results in the *original* batch order (matching the engine).
+    """
+    n = len(ops)
+    g = graph if graph is not None else SequentialGraph()
+    order: Iterable[int]
+    if phases is None:
+        order = range(n)
+    else:
+        order = sorted(range(n), key=lambda i: phases[i])
+    results: List[bool] = [False] * n
+    for i in order:
+        results[i] = g.apply(int(ops[i]), int(us[i]), int(vs[i]))
+    return results, g

@@ -1,0 +1,79 @@
+"""Segmented-scan building blocks for the wait-free combine engine.
+
+The paper's helping mechanism ("every thread applies every pending op with a
+lower phase") becomes, on a vector machine, function composition along the
+phase-sorted op sequence.  Both DFAs involved are tiny:
+
+* vertex liveness: 2-state machine {dead, live}; transitions are const/id,
+  represented as a pair ``(f(dead), f(live))`` — composition is associative.
+* per-epoch edge validity: 1-bit machine, same representation.
+
+Because every segment head is replaced by ``f_head ∘ const(seed)`` (a constant
+function), composition across segment boundaries collapses automatically and a
+plain ``lax.associative_scan`` resolves *all* segments in O(log n) depth with
+no explicit reset flags.  That O(log n) bound — independent of how contended
+any single key is — is the dataflow analogue of wait-freedom.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compose_fnpair(a, b):
+    """Compose 2-state transition functions b∘a.
+
+    Elements are pairs (f0, f1) = (f(state=0), f(state=1)), int32 in {0,1}.
+    lax.associative_scan applies ``fn(prev, next)`` so the scan computes
+    ``next ∘ prev`` — exactly phase order when the array is phase-sorted.
+    """
+    a0, a1 = a
+    b0, b1 = b
+    # (b∘a)(s) = b(a(s)); a(s) ∈ {0,1} selects b0/b1.
+    c0 = jnp.where(a0 == 1, b1, b0)
+    c1 = jnp.where(a1 == 1, b1, b0)
+    return (c0, c1)
+
+
+def scan_fnpairs(f0: jnp.ndarray, f1: jnp.ndarray):
+    """Inclusive scan of function-pair composition along axis 0."""
+    return jax.lax.associative_scan(compose_fnpair, (f0, f1))
+
+
+def last_set_combine(a, b):
+    """Monoid: keep the most recent element whose ``set`` flag is true.
+
+    Elements are (payload_pytree, set_flag).  Used for the stabbing query
+    ("what was vertex u's (live, inc) at phase p?") — queries are unset
+    elements that read through to the last transition before them.
+    """
+    pa, fa = a
+    pb, fb = b
+    out = jax.tree.map(lambda x, y: jnp.where(fb, y, x), pa, pb)
+    return (out, fa | fb)
+
+
+def scan_last_set(payload, set_flag: jnp.ndarray):
+    """Inclusive last-set scan along axis 0. payload: pytree of [n,...] arrays."""
+    return jax.lax.associative_scan(last_set_combine, (payload, set_flag))
+
+
+def seg_cumsum_exclusive(x: jnp.ndarray, heads: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive cumulative sum within segments delimited by ``heads``.
+
+    heads[i] == True marks the first element of a segment.
+    """
+
+    def combine(a, b):
+        va, fa = a
+        vb, fb = b
+        return (jnp.where(fb, vb, va + vb), fa | fb)
+
+    incl, _ = jax.lax.associative_scan(combine, (x, heads))
+    return incl - x
+
+
+def shift_right(x: jnp.ndarray, fill) -> jnp.ndarray:
+    """x[i-1] with x[0] = fill (for 'value at previous sorted position')."""
+    return jnp.concatenate([jnp.full((1,) + x.shape[1:], fill, dtype=x.dtype), x[:-1]], axis=0)

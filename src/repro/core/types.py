@@ -1,0 +1,139 @@
+"""Core types for the wait-free concurrent graph engine.
+
+The paper's shared-memory structures map onto static-shape JAX arrays:
+
+* ``VNode{val, vnext, enext, marked}``  -> open-addressing vertex table with a
+  ``live`` bit (inverse of the paper's ``marked``) and an ``inc`` incarnation
+  counter (the dataflow analogue of the companion report's ENode->VNode
+  pointer, used to detect stale edges after a vertex is removed and re-added).
+* ``ENode{val, enext, marked}``         -> open-addressing edge table keyed by
+  ``(u_key, v_key)`` carrying the incarnations of both endpoints at bind time.
+* ``ODA`` (operation descriptor array)  -> a literal device array of
+  ``(phase, op_type, u, v)`` descriptors (:class:`OpBatch`).
+* ``maxPhase`` fetch-and-add            -> host-side monotone counter plus a
+  per-batch ``iota`` (see :class:`repro.core.graph.WaitFreeGraph`).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# --- Operation codes (the paper's OpType enum) -------------------------------
+OP_NOP = 0
+OP_ADD_VERTEX = 1
+OP_REMOVE_VERTEX = 2
+OP_CONTAINS_VERTEX = 3
+OP_ADD_EDGE = 4
+OP_REMOVE_EDGE = 5
+OP_CONTAINS_EDGE = 6
+
+OP_NAMES = {
+    OP_NOP: "nop",
+    OP_ADD_VERTEX: "add_vertex",
+    OP_REMOVE_VERTEX: "remove_vertex",
+    OP_CONTAINS_VERTEX: "contains_vertex",
+    OP_ADD_EDGE: "add_edge",
+    OP_REMOVE_EDGE: "remove_edge",
+    OP_CONTAINS_EDGE: "contains_edge",
+}
+
+VERTEX_OPS = (OP_ADD_VERTEX, OP_REMOVE_VERTEX, OP_CONTAINS_VERTEX)
+EDGE_OPS = (OP_ADD_EDGE, OP_REMOVE_EDGE, OP_CONTAINS_EDGE)
+
+# Sentinel for an empty hash slot / absent incarnation.
+EMPTY_KEY = np.int32(-1)
+ABSENT_INC = np.int32(-1)
+
+# Bounded probe chain: the wait-free locate bound.  If any probe chain would
+# exceed this, the engine reports failure and the host grows the table --
+# the amortized-O(1) analogue of the paper's unbounded malloc.
+MAX_PROBES = 32
+MAX_INSERT_ROUNDS = 16
+GROW_LOAD_FACTOR = 0.5
+
+
+class GraphState(NamedTuple):
+    """Functional (pure-pytree) state of the concurrent graph.
+
+    All arrays are device arrays; the struct is immutable and every engine
+    pass returns a new one.  ``live=False`` with a retained key is exactly a
+    Harris "marked" node: logically deleted, physically present until a
+    rehash (compaction) reclaims it.
+    """
+
+    # vertex table (capacity Cv)
+    v_key: jnp.ndarray   # i32[Cv], EMPTY_KEY for empty slots
+    v_live: jnp.ndarray  # bool[Cv]
+    v_inc: jnp.ndarray   # i32[Cv], bumped on every dead->live transition
+
+    # edge table (capacity Ce), keyed by (u_key, v_key)
+    e_key_u: jnp.ndarray  # i32[Ce]
+    e_key_v: jnp.ndarray  # i32[Ce]
+    e_live: jnp.ndarray   # bool[Ce]
+    e_inc_u: jnp.ndarray  # i32[Ce] endpoint incarnations at bind time
+    e_inc_v: jnp.ndarray  # i32[Ce]
+
+    @property
+    def v_capacity(self) -> int:
+        return self.v_key.shape[0]
+
+    @property
+    def e_capacity(self) -> int:
+        return self.e_key_u.shape[0]
+
+
+class OpBatch(NamedTuple):
+    """A batch of operation descriptors — the device-array ODA.
+
+    ``phase`` is the linearization order (unique int32 per op).  The engine
+    resolves every op's success/failure exactly as if the batch had been
+    applied sequentially in increasing phase order.
+    """
+
+    op: jnp.ndarray     # i32[n] in OP_*
+    u: jnp.ndarray      # i32[n] vertex key / edge source key
+    v: jnp.ndarray      # i32[n] edge destination key (ignored for vertex ops)
+    phase: jnp.ndarray  # i32[n] unique linearization stamps
+
+    @property
+    def size(self) -> int:
+        return self.op.shape[0]
+
+
+class ApplyResult(NamedTuple):
+    state: GraphState
+    success: jnp.ndarray   # bool[n] per-op result, original batch order
+    ok: jnp.ndarray        # bool[] False => table overflow, host must grow+retry
+    stats: jnp.ndarray     # i32[4]: [n_conflicting, v_probe_max, e_probe_max, n_inserted]
+
+
+def make_state(v_capacity: int = 1024, e_capacity: int = 4096) -> GraphState:
+    """Fresh empty graph with the given table capacities (powers of two)."""
+    assert v_capacity & (v_capacity - 1) == 0, "v_capacity must be a power of two"
+    assert e_capacity & (e_capacity - 1) == 0, "e_capacity must be a power of two"
+    return GraphState(
+        v_key=jnp.full((v_capacity,), EMPTY_KEY, dtype=jnp.int32),
+        v_live=jnp.zeros((v_capacity,), dtype=bool),
+        v_inc=jnp.full((v_capacity,), ABSENT_INC, dtype=jnp.int32),
+        e_key_u=jnp.full((e_capacity,), EMPTY_KEY, dtype=jnp.int32),
+        e_key_v=jnp.full((e_capacity,), EMPTY_KEY, dtype=jnp.int32),
+        e_live=jnp.zeros((e_capacity,), dtype=bool),
+        e_inc_u=jnp.full((e_capacity,), ABSENT_INC, dtype=jnp.int32),
+        e_inc_v=jnp.full((e_capacity,), ABSENT_INC, dtype=jnp.int32),
+    )
+
+
+def make_batch(ops, us, vs=None, phase_base: int = 0) -> OpBatch:
+    """Build an OpBatch from Python/numpy sequences; phases = base + iota."""
+    op = jnp.asarray(np.asarray(ops, dtype=np.int32))
+    u = jnp.asarray(np.asarray(us, dtype=np.int32))
+    if vs is None:
+        v = jnp.zeros_like(u)
+    else:
+        v = jnp.asarray(np.asarray(vs, dtype=np.int32))
+    n = op.shape[0]
+    phase = phase_base + jnp.arange(n, dtype=jnp.int32)
+    return OpBatch(op=op, u=u, v=v, phase=phase)

@@ -1,0 +1,56 @@
+"""Workload generators mirroring the paper's experimental setup (§5).
+
+The paper: initial graph of 1000 vertices; each thread draws ops from one of
+three distributions over (AddV, RemV, ConV, AddE, RemE, ConE):
+
+  * lookup-intensive : (2.5, 2.5, 45, 2.5, 2.5, 45) %
+  * balanced         : (12.5, 12.5, 25, 12.5, 12.5, 25) %
+  * update-intensive : (22.5, 22.5, 5, 22.5, 22.5, 5) %
+
+Here "threads" are batch lanes: a batch of n ops is the ODA published by n
+logical submitters, resolved concurrently by the engines.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .types import (
+    OP_ADD_EDGE,
+    OP_ADD_VERTEX,
+    OP_CONTAINS_EDGE,
+    OP_CONTAINS_VERTEX,
+    OP_REMOVE_EDGE,
+    OP_REMOVE_VERTEX,
+)
+
+MIXES = {
+    "lookup": (0.025, 0.025, 0.45, 0.025, 0.025, 0.45),
+    "balanced": (0.125, 0.125, 0.25, 0.125, 0.125, 0.25),
+    "update": (0.225, 0.225, 0.05, 0.225, 0.225, 0.05),
+}
+
+_OPS = np.array(
+    [OP_ADD_VERTEX, OP_REMOVE_VERTEX, OP_CONTAINS_VERTEX,
+     OP_ADD_EDGE, OP_REMOVE_EDGE, OP_CONTAINS_EDGE],
+    dtype=np.int32,
+)
+
+
+def sample_batch(
+    rng: np.random.Generator, n: int, mix: str = "balanced", key_space: int = 1000
+):
+    """Sample one op batch. Returns (ops, us, vs) numpy arrays."""
+    probs = np.asarray(MIXES[mix])
+    ops = _OPS[rng.choice(6, size=n, p=probs)]
+    us = rng.integers(0, key_space, size=n).astype(np.int32)
+    vs = rng.integers(0, key_space, size=n).astype(np.int32)
+    return ops, us, vs
+
+
+def initial_vertices(key_space: int = 1000):
+    """The paper's initial graph: 1000 vertices (keys 0..999), no edges."""
+    ops = np.full(key_space, OP_ADD_VERTEX, np.int32)
+    us = np.arange(key_space, dtype=np.int32)
+    vs = np.zeros(key_space, np.int32)
+    return ops, us, vs

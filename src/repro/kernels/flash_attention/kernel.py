@@ -1,0 +1,163 @@
+"""Pallas TPU flash attention (forward), causal + sliding-window + GQA.
+
+TPU-native tiling:
+  * grid = (batch, q_heads, Sq/BLOCK_Q, Sk/BLOCK_K); the KV axis is the
+    innermost (sequential) grid dimension, so the online-softmax carries
+    (m, l, acc) live in VMEM scratch across KV steps — they never touch HBM.
+  * BlockSpecs stage (BLOCK_Q × D) of q and (BLOCK_K × D) of k/v into VMEM
+    per step; D and the block sizes are multiples of 128 at production
+    shapes, keeping the q·kᵀ and p·v matmuls MXU-aligned.
+  * GQA is an index_map: q head h reads kv head h // group_size — no
+    jnp.repeat materialization.
+  * fully-masked (causal / out-of-window) KV blocks are skipped with
+    pl.when — the TPU equivalent of CUDA flash's early-exit, expressed as
+    predicated compute on the sequential grid walk.
+
+Validated in interpret mode against ``ref.mha_reference`` (see
+tests/test_kernels_flash.py); on real TPUs the same code path compiles to
+Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(
+    q_ref, k_ref, v_ref,            # VMEM blocks
+    o_ref,                           # output block
+    m_scr, l_scr, acc_scr,           # VMEM scratch carries
+    *,
+    sm_scale: float,
+    causal: bool,
+    window: int | None,
+    block_q: int,
+    block_k: int,
+    seq_k: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # block-level visibility: skip fully-masked KV blocks entirely
+    visible = True
+    if causal:
+        visible = k_start <= q_start + block_q - 1
+    if window is not None:
+        visible = visible & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale   # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)              # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)              # (BK, D)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (BQ, BK)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = k_pos < seq_k
+        if causal:
+            ok = ok & (k_pos <= q_pos)
+        if window is not None:
+            ok = ok & (k_pos > q_pos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "sm_scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Sk, D)
+    v: jnp.ndarray,  # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0, (Sq, block_q)
+    nq = Sq // block_q
+    nk = -(-Sk // block_k)
+    pad_k = nk * block_k - Sk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    grid = (B, Hq, nq, nk)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        seq_k=Sk,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m carry
+            pltpu.VMEM((block_q,), jnp.float32),      # l carry
+            pltpu.VMEM((block_q, D), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Public entry point for flash attention: kernel on TPU, oracle elsewhere.
+
+``attention(...)`` dispatches:
+  * on TPU backends — the Pallas kernel (``kernel.flash_attention``);
+  * on CPU (tests, dry-runs) — the chunked jnp path (``ref.mha_chunked``),
+    whose HLO is compact (lax.scan over KV blocks) and memory-linear, so
+    512-device dry-run compiles stay tractable;
+  * ``impl=`` overrides for benchmarking ("kernel", "chunked", "reference",
+    "kernel_interpret").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def _default_impl() -> str:
+    return "kernel" if jax.default_backend() == "tpu" else "chunked"
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    impl: str | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    impl = impl or _default_impl()
+    if impl == "kernel":
+        return _kernel.flash_attention(
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+            block_q=block_q, block_k=block_k,
+        )
+    if impl == "kernel_interpret":
+        return _kernel.flash_attention(
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+            block_q=block_q, block_k=block_k, interpret=True,
+        )
+    if impl == "chunked":
+        return _ref.mha_chunked(
+            q, k, v, causal=causal, window=window, sm_scale=sm_scale, block_k=block_k
+        )
+    if impl == "reference":
+        return _ref.mha_reference(q, k, v, causal=causal, window=window, sm_scale=sm_scale)
+    raise ValueError(f"unknown impl {impl!r}")

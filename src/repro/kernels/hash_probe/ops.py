@@ -1,0 +1,20 @@
+"""Public entry point for the batched hash probe."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def hash_probe(table_keys: jnp.ndarray, query_keys: jnp.ndarray, *, impl: str | None = None):
+    impl = impl or ("kernel" if jax.default_backend() == "tpu" else "reference")
+    if impl == "kernel":
+        return _kernel.hash_probe(table_keys, query_keys)
+    if impl == "kernel_interpret":
+        return _kernel.hash_probe(table_keys, query_keys, interpret=True)
+    if impl == "reference":
+        return _ref.hash_probe_reference(table_keys, query_keys)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for batched hash-table probing.
+
+Exactly the semantics of ``repro.core.locate._locate`` specialized to the
+vertex table: for each query key, walk the triangular probe chain until the
+key or an empty slot is found (bounded by MAX_PROBES).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import hash_vertex, probe_slot
+from repro.core.types import EMPTY_KEY, MAX_PROBES
+
+
+def hash_probe_reference(table_keys: jnp.ndarray, query_keys: jnp.ndarray):
+    """Returns (found_slot, insert_slot): i32[n] each, -1 where absent/full."""
+    cap = table_keys.shape[0]
+    n = query_keys.shape[0]
+    home = hash_vertex(query_keys, cap)
+    init = (jnp.full((n,), -1, jnp.int32), jnp.full((n,), -1, jnp.int32))
+
+    def body(step, carry):
+        found, empty = carry
+        pending = (found < 0) & (empty < 0)
+        s = probe_slot(home, jnp.int32(step), cap)
+        k = table_keys[s]
+        found = jnp.where(pending & (k == query_keys), s, found)
+        empty = jnp.where(pending & (k == EMPTY_KEY) & (k != query_keys), s, empty)
+        return (found, empty)
+
+    return jax.lax.fori_loop(0, MAX_PROBES, body, init)

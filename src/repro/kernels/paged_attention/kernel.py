@@ -1,0 +1,134 @@
+"""Pallas TPU paged decode attention.
+
+Decode is bandwidth-bound: every step reads the whole live KV cache once.
+The TPU-native structure:
+
+  * ``PrefetchScalarGridSpec`` stages the block table and sequence lengths
+    into SMEM *before* the grid walk, so the k/v BlockSpec ``index_map`` can
+    dereference ``block_table[b, p]`` — the page indirection happens in the
+    pipeline's DMA engine (HBM -> VMEM double-buffering), not in the compute
+    body.  This is the paper-technique hook: the block table handed to the
+    DMA engine is exactly the adjacency state maintained by the wait-free
+    graph engine.
+  * grid = (B, Hkv, pages_per_seq); the page axis is sequential, carrying
+    online-softmax (m, l, acc) in VMEM scratch.
+  * pages past ``seq_len`` are skipped with ``pl.when`` — with the engine's
+    deterministic page allocation, live pages are contiguous in the table.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    # scalar-prefetch refs
+    block_table_ref, seq_lens_ref,
+    # VMEM blocks
+    q_ref, k_ref, v_ref,
+    o_ref,
+    m_scr, l_scr, acc_scr,
+    *,
+    sm_scale: float,
+    page_size: int,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    seq_len = seq_lens_ref[b]
+    page_start = p * page_size
+
+    @pl.when(page_start < seq_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale   # (group, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (page_size, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)           # (page_size, D)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (group, page_size)
+        pos = page_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        pr = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + pr.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            pr, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(p == np_ - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def paged_attention(
+    q: jnp.ndarray,            # (B, Hq, D)
+    k_pages: jnp.ndarray,      # (P, page_size, Hkv, D)
+    v_pages: jnp.ndarray,      # (P, page_size, Hkv, D)
+    block_table: jnp.ndarray,  # (B, pages_per_seq) int32
+    seq_lens: jnp.ndarray,     # (B,) int32
+    *,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    P, page_size, Hkv, _ = k_pages.shape
+    _, pages_per_seq = block_table.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+
+    # view q as (B, Hkv, group, D) so one grid cell owns one kv head's group
+    q4 = q.reshape(B, Hkv, group, D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), lambda b, h, p, bt, sl: (b, h, 0, 0)),
+            # page indirection: the DMA engine chases the graph-engine-owned
+            # block table
+            pl.BlockSpec(
+                (1, page_size, 1, D), lambda b, h, p, bt, sl: (bt[b, p], 0, h, 0)
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, D), lambda b, h, p, bt, sl: (bt[b, p], 0, h, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), lambda b, h, p, bt, sl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+    )
+
+    kernel = functools.partial(_paged_kernel, sm_scale=sm_scale, page_size=page_size)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, q4, k_pages, v_pages)
+    return out.reshape(B, Hq, D)

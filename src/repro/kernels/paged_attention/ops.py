@@ -1,0 +1,35 @@
+"""Public entry point for paged decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def paged_attention(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,
+    seq_lens: jnp.ndarray,
+    *,
+    sm_scale: float | None = None,
+    impl: str | None = None,
+) -> jnp.ndarray:
+    impl = impl or ("kernel" if jax.default_backend() == "tpu" else "reference")
+    if impl == "kernel":
+        return _kernel.paged_attention(
+            q, k_pages, v_pages, block_table, seq_lens, sm_scale=sm_scale
+        )
+    if impl == "kernel_interpret":
+        return _kernel.paged_attention(
+            q, k_pages, v_pages, block_table, seq_lens, sm_scale=sm_scale, interpret=True
+        )
+    if impl == "reference":
+        return _ref.paged_attention_reference(
+            q, k_pages, v_pages, block_table, seq_lens, sm_scale=sm_scale
+        )
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for paged decode attention.
+
+One new token per sequence attends over a paged KV cache addressed through a
+block table (vLLM-style, adapted to TPU).  The block tables in the serving
+engine are *produced by the wait-free graph engine* (sequence -> page
+ownership edges), so this op is where the paper's technique meets the
+model's inner loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_reference(
+    q: jnp.ndarray,            # (B, Hq, D) — one token per sequence
+    k_pages: jnp.ndarray,      # (P, page_size, Hkv, D)
+    v_pages: jnp.ndarray,      # (P, page_size, Hkv, D)
+    block_table: jnp.ndarray,  # (B, pages_per_seq) int32 page ids
+    seq_lens: jnp.ndarray,     # (B,) int32 valid KV length per sequence
+    *,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    P, page_size, Hkv, _ = k_pages.shape
+    _, pages_per_seq = block_table.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+
+    # gather each sequence's pages into a contiguous view (oracle only —
+    # the kernel never materializes this)
+    k_seq = k_pages[block_table]  # (B, pages, page_size, Hkv, D)
+    v_seq = v_pages[block_table]
+    S = pages_per_seq * page_size
+    k_seq = k_seq.reshape(B, S, Hkv, D)
+    v_seq = v_seq.reshape(B, S, Hkv, D)
+
+    qf = q.reshape(B, Hkv, g, D).astype(jnp.float32) * sm_scale
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k_seq.astype(jnp.float32))
+    pos = jnp.arange(S)[None, :]  # (1, S)
+    ok = pos < seq_lens[:, None]
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_seq.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

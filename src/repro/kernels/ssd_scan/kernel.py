@@ -1,0 +1,126 @@
+"""Pallas TPU chunked SSD / gated-linear-attention scan.
+
+TPU adaptation of the recurrence H_t = diag(w_t)H_{t-1} + k_t⊗v_t:
+
+  * grid = (B, H, S/CHUNK) with the chunk axis sequential; the K×V state
+    matrix lives in **VMEM scratch for the whole sequence walk** — HBM
+    traffic is exactly one read of (q,k,v,w) and one write of y per token
+    (the bandwidth floor), zero state traffic.  This is the core hardware
+    adaptation: on GPUs these scans recompute state per block from HBM;
+    on TPU the sequential grid + persistent VMEM scratch makes the state
+    resident.
+  * intra-chunk work is formulated with only non-positive exponents
+    (see ref.linear_scan_chunked) so small decays cannot overflow.
+  * ``scalar_decay=True`` (Mamba-2): the pairwise decay factors collapse to
+    a (C, C) matrix, so the intra-chunk term becomes (q·kᵀ ⊙ decay) @ v —
+    two MXU matmuls.  ``False`` (RWKV-6): per-channel decay needs the
+    (C, C, K) pairwise tensor — VPU-bound, kept at CHUNK=64 to bound VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    q_ref, k_ref, v_ref, w_ref,   # (1,1,C,K/V) VMEM blocks
+    y_ref,                         # (1,1,C,V)
+    h_scr,                         # (K,V) f32 persistent state
+    *,
+    chunk: int,
+    scalar_decay: bool,
+    strict: bool,
+):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    qt = q_ref[0, 0].astype(jnp.float32)  # (C, K)
+    kt = k_ref[0, 0].astype(jnp.float32)
+    vt = v_ref[0, 0].astype(jnp.float32)  # (C, V)
+    wt = w_ref[0, 0].astype(jnp.float32)  # (C, K)
+
+    logw = jnp.log(jnp.maximum(wt, 1e-30))
+    L = jnp.cumsum(logw, axis=0)               # (C, K), ≤0 rows
+    # strict readout sees H_{t-1}: q-side exponent is the exclusive cumsum
+    Lq = (L - logw) if strict else L
+
+    h = h_scr[...]
+    # inter-chunk readout
+    q_in = qt * jnp.exp(Lq)
+    y = jax.lax.dot_general(
+        q_in, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, V)
+
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = (s_idx < t_idx) if strict else (s_idx <= t_idx)
+
+    if scalar_decay:
+        # decay identical across K: one (C,) log-decay vector suffices
+        l1 = Lq[:, 0]                              # (C,)
+        ls = L[:, 0]
+        dd = jnp.exp(jnp.minimum(l1[:, None] - ls[None, :], 0.0))  # (C, C)
+        s = jax.lax.dot_general(
+            qt, kt, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        s = jnp.where(mask, s * dd, 0.0)
+    else:
+        # per-channel decay: pairwise (C, C, K) tensor (VPU)
+        diff = jnp.minimum(Lq[:, None, :] - L[None, :, :], 0.0)     # (C,C,K)
+        s = jnp.einsum("tk,sk,tsk->ts", qt, kt, jnp.exp(diff))
+        s = jnp.where(mask, s, 0.0)
+
+    y = y + jax.lax.dot_general(
+        s, vt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update (exponents ≤ 0)
+    Lc = L[-1:, :]                                  # (1, K)
+    k_out = kt * jnp.exp(Lc - L)                    # (C, K)
+    h_scr[...] = h * jnp.exp(Lc[0][:, None]) + jax.lax.dot_general(
+        k_out, vt, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "scalar_decay", "strict", "interpret")
+)
+def ssd_scan(
+    q: jnp.ndarray,  # (B, H, S, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # (B, H, S, V)
+    w: jnp.ndarray,  # (B, H, S, K)
+    *,
+    chunk: int = 64,
+    scalar_decay: bool = False,
+    strict: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, S, K = q.shape
+    V = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+
+    kernel = functools.partial(
+        _ssd_kernel, chunk=chunk, scalar_decay=scalar_decay, strict=strict
+    )
+    spec_k = pl.BlockSpec((1, 1, chunk, K), lambda b, h, c: (b, h, c, 0))
+    spec_v = pl.BlockSpec((1, 1, chunk, V), lambda b, h, c: (b, h, c, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n),
+        in_specs=[spec_k, spec_k, spec_v, spec_k],
+        out_specs=spec_v,
+        out_shape=jax.ShapeDtypeStruct((B, H, S, V), q.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, w)

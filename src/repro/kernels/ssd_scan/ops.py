@@ -1,0 +1,40 @@
+"""Public entry point for the SSD / gated-linear-attention scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def ssd_scan(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    chunk: int = 64,
+    scalar_decay: bool = False,
+    strict: bool = False,
+    impl: str | None = None,
+):
+    """Returns y (B,H,S,V). For (y, final_state) use the ref module directly."""
+    impl = impl or ("kernel" if jax.default_backend() == "tpu" else "chunked")
+    if impl == "kernel":
+        return _kernel.ssd_scan(
+            q, k, v, w, chunk=chunk, scalar_decay=scalar_decay, strict=strict
+        )
+    if impl == "kernel_interpret":
+        return _kernel.ssd_scan(
+            q, k, v, w, chunk=chunk, scalar_decay=scalar_decay, strict=strict,
+            interpret=True,
+        )
+    if impl == "chunked":
+        y, _ = _ref.linear_scan_chunked(q, k, v, w, chunk=chunk, strict=strict)
+        return y
+    if impl == "reference":
+        y, _ = _ref.linear_scan_reference(q, k, v, w, strict=strict)
+        return y
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,134 @@
+"""Pure-jnp oracle for the gated linear-attention / SSD state scan.
+
+Semantics (per batch b, head h), with per-channel decay w_t ∈ (0,1]^K:
+
+    H_t = diag(w_t) · H_{t-1} + k_t ⊗ v_t          (state: K×V matrix)
+    y_t = H_tᵀ · q_t                                (readout)
+
+This covers both assigned recurrent families:
+  * Mamba-2 / SSD  — scalar decay a_t (broadcast over K),
+  * RWKV-6 (Finch) — data-dependent per-channel decay w_t.
+
+``linear_scan_reference`` is the exact sequential recurrence (the oracle).
+``linear_scan_chunked`` is the chunked form used by the models on CPU/dry-run
+(compact HLO, numerically safe: all exponent differences are ≤ 0).
+``linear_scan_step`` is the O(1) decode step for serving.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_reference(
+    q: jnp.ndarray,  # (B, H, S, K)
+    k: jnp.ndarray,  # (B, H, S, K)
+    v: jnp.ndarray,  # (B, H, S, V)
+    w: jnp.ndarray,  # (B, H, S, K) decay in (0, 1]
+    h0: jnp.ndarray | None = None,  # (B, H, K, V)
+    *,
+    strict: bool = False,
+):
+    """``strict=False``: y_t = q_t·H_t (SSD/Mamba-2 readout-after-update).
+    ``strict=True``:  y_t = q_t·H_{t-1} (RWKV-6 readout-before-update; the
+    per-token "bonus" u⊙k_t term is added by the caller)."""
+    B, H, S, K = q.shape
+    V = v.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(h, xs):
+        qt, kt, vt, wt = xs  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        if strict:
+            y = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), h)
+        h = h * wt[..., None].astype(jnp.float32) + (
+            kt[..., :, None].astype(jnp.float32) * vt[..., None, :].astype(jnp.float32)
+        )
+        if not strict:
+            y = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), h)
+        return h, y
+
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (q, k, v, w))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(q.dtype), hT
+
+
+def linear_scan_step(q, k, v, w, h, *, strict: bool = False):
+    """One decode step: q,k,w (B,H,K); v (B,H,V); h (B,H,K,V) -> (y, h')."""
+    if strict:
+        y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), h)
+    h = h * w[..., None].astype(jnp.float32) + (
+        k[..., :, None].astype(jnp.float32) * v[..., None, :].astype(jnp.float32)
+    )
+    if not strict:
+        y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), h)
+    return y.astype(q.dtype), h
+
+
+def linear_scan_chunked(
+    q: jnp.ndarray,  # (B, H, S, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,  # (B, H, S, V)
+    w: jnp.ndarray,  # (B, H, S, K)
+    h0: jnp.ndarray | None = None,
+    *,
+    chunk: int = 64,
+    strict: bool = False,
+):
+    """Chunked scan: state carried across chunks; within a chunk the
+    contribution is computed with only non-positive exponents:
+
+      y_t  = (q_t ⊙ e^{L_t}) · H_in  +  Σ_{s≤t} (q_t · (k_s ⊙ e^{L_t - L_s})) v_s
+      H_out = diag(e^{L_C}) H_in + Σ_t (k_t ⊙ e^{L_C - L_t}) ⊗ v_t
+
+    with L_t = Σ_{s≤t} log w_s (within-chunk cumulative, ≤ 0, decreasing) —
+    every exponent is ≤ 0, so no 1/decay blow-ups for small decays (the
+    failure mode of the naive factorized GLA form).
+    """
+    B, H, S, K = q.shape
+    V = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    if h0 is None:
+        h0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    qc = q.reshape(B, H, n, chunk, K).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, n, chunk, K).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, n, chunk, V).transpose(2, 0, 1, 3, 4)
+    wc = w.reshape(B, H, n, chunk, K).transpose(2, 0, 1, 3, 4)
+
+    # strict: s < t (readout-before-update, RWKV-6); else s <= t (SSD)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1 if strict else 0)
+
+    def body(h, xs):
+        qt, kt, vt, wt = (x.astype(jnp.float32) for x in xs)  # (B,H,C,K/V)
+        logw = jnp.log(jnp.maximum(wt, 1e-30))
+        L = jnp.cumsum(logw, axis=2)                                  # (B,H,C,K)
+        # strict readout sees H_{t-1}: q-side exponent is the *exclusive* sum
+        Lq = (L - logw) if strict else L
+        # inter-chunk: q decayed to chunk start reads the carried state
+        q_in = qt * jnp.exp(Lq)
+        y = jnp.einsum("bhck,bhkv->bhcv", q_in, h)
+        # intra-chunk: pairwise decayed scores (exponents ≤ 0 under mask)
+        diff = Lq[:, :, :, None, :] - L[:, :, None, :, :]            # (B,H,C,C,K)
+        scores = jnp.einsum(
+            "bhtk,bhsk,bhtsk->bhts", qt, kt, jnp.exp(jnp.minimum(diff, 0.0))
+        )
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        y = y + jnp.einsum("bhts,bhsv->bhtv", scores, vt)
+        # state update
+        Lc = L[:, :, -1:, :]                                          # (B,H,1,K)
+        k_out = kt * jnp.exp(Lc - L)
+        h = h * jnp.exp(Lc[:, :, 0, :, None]) + jnp.einsum(
+            "bhck,bhcv->bhkv", k_out, vt
+        )
+        return h, y
+
+    # remat the chunk body: without it, scan AD stacks the (B,H,C,C,K)
+    # pairwise-decay residuals across all chunks (40 GiB/device at rwkv6
+    # train_4k); with it, only the (B,H,K,V) carries are stored.
+    body = jax.checkpoint(body)
+    hT, ys = jax.lax.scan(body, h0, (qc, kc, vc, wc))
+    ys = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S, V)
+    return ys.astype(q.dtype), hT

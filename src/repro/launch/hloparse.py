@@ -1,0 +1,463 @@
+"""Execution-weighted cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body **once** (verified
+empirically: a trip-count-8 scan of a matmul reports 1 matmul's FLOPs), so
+raw numbers undercount any scanned program — which is every cell here, since
+we scan over layers, gradient-accumulation microbatches, KV chunks and loss
+chunks.  This module re-derives totals from the compiled module text:
+
+  1. parse computations and ops (two passes: symbol table of op -> result
+     type, then structure);
+  2. walk the call graph from ENTRY with an execution multiplier —
+     ``while`` bodies/conds multiply by ``backend_config known_trip_count``
+     (XLA records it for counted loops; fallback: the constant compared
+     against in the condition computation), ``fusion``/``call`` descend at
+     ×1, ``conditional`` takes the max across branches;
+  3. model per-op cost:
+       * flops — ``dot``: 2 × |result| × K (K = product of lhs contracting
+         dims, lhs shape resolved through the symbol table); ``reduce`` /
+         elementwise arithmetic: |operand| or |result|; ``rng``/transcendental
+         counted ×1 like XLA does;
+       * bytes — per *kernel* (top-level op in a computation): sum of operand
+         result-sizes + own result size; fusions count their boundary
+         operands/result only (fusion-aware HBM-traffic proxy); plumbing ops
+         (tuple/gte/bitcast/parameter/constant/while/conditional) are free;
+       * collectives — result bytes by kind (all-gather counts gathered
+         bytes, reduce-scatter counts scattered bytes), with replica-group
+         size recorded so the roofline can model ring traffic per link.
+
+All counts are execution-weighted (multiplied through enclosing loops).
+Validated against exactly-known programs in tests/test_hloparse.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _parse_op_line(line: str):
+    """Split "%name = <type> opcode(..." into (name, type_str, opcode).
+
+    Tuple types embed ``/*index=N*/`` comments and layout braces, so the
+    type is extracted by paren matching, not regex.
+    """
+    m = _NAME_RE.match(line)
+    if m is None:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        type_str, tail = rest[: i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, tail = rest[:sp], rest[sp:]
+    mo = _OPCODE_RE.match(tail)
+    if mo is None:
+        return None
+    return name, type_str, mo.group(1)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_BRANCH_RE = re.compile(
+    r"true_computation=%?([\w.\-]+),\s*false_computation=%?([\w.\-]+)"
+)
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"?(\d+)"?')
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_REPLICA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_REPLICA_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_INT_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_META_NAME_RE = re.compile(r'op_name="([^"]+)"')
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+    "logistic", "sign", "floor", "ceil", "round-nearest-even", "atan2",
+    "cosine", "sine", "expm1", "log-plus-one", "remainder", "select",
+    "clamp", "compare", "and", "or", "xor", "not", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic",
+}
+_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "reshape", "custom-call", "opt-barrier", "domain",
+    "get-dimension-size", "add-dependency",
+}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (sums across tuple elements)."""
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_array_dims(type_str: str) -> List[int]:
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return shape_bytes(self.type_str)
+
+    @property
+    def result_elems(self) -> int:
+        return shape_elems(self.type_str)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_entry: bool = False
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # (kind, bytes, group_size, multiplier, op_name) per static site
+    collective_sites: List[Tuple[str, int, int, float, str]] = dataclasses.field(
+        default_factory=list
+    )
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0.0) + v * mult
+        for kind, b, g, m, name in other.collective_sites:
+            self.collective_sites.append((kind, b, g, m * mult, name))
+
+
+class HloModule:
+    def __init__(self, computations: Dict[str, Computation], entry: str):
+        self.computations = computations
+        self.entry = entry
+        self._symbols: Dict[str, str] = {}  # op name -> result type str
+        for comp in computations.values():
+            for op in comp.ops:
+                self._symbols[op.name] = op.type_str
+
+    def result_type(self, op_name: str) -> str:
+        return self._symbols.get(op_name, "")
+
+
+def parse_module(text: str) -> HloModule:
+    computations: Dict[str, Computation] = {}
+    entry = ""
+    current: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            m = _COMP_RE.match(line.strip())
+            if m and "=" not in line.split("(", 1)[0]:
+                current = Computation(
+                    name=m.group(2), ops=[], is_entry=bool(m.group(1))
+                )
+            continue
+        if line.strip() == "}":
+            computations[current.name] = current
+            if current.is_entry:
+                entry = current.name
+            current = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name, type_str, opcode = parsed
+            current.ops.append(
+                Op(name=name, type_str=type_str, opcode=opcode, line=line)
+            )
+    if not entry and computations:
+        entry = list(computations)[-1]
+    return HloModule(computations, entry)
+
+
+def _trip_count(module: HloModule, op: Op) -> int:
+    m = _TRIP_RE.search(op.line)
+    if m:
+        return int(m.group(1))
+    # fallback: the constant in the condition computation's compare
+    mcb = _COND_BODY_RE.search(op.line)
+    if mcb:
+        cond = module.computations.get(mcb.group(1))
+        if cond is not None:
+            consts = []
+            for o in cond.ops:
+                mc = _CONST_INT_RE.search(o.line)
+                if mc:
+                    consts.append(int(mc.group(1)))
+            if consts:
+                return max(consts)
+    return 1
+
+
+def _group_size(line: str) -> int:
+    m = _REPLICA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPLICA_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def _dot_flops(module: HloModule, op: Op) -> float:
+    operands = _operand_names(op)
+    if not operands:
+        return 0.0
+    lhs_type = module.result_type(operands[0])
+    lhs_dims = _first_array_dims(lhs_type)
+    mc = _LHS_CONTRACT_RE.search(op.line)
+    k = 1
+    if mc and lhs_dims:
+        for d in mc.group(1).split(","):
+            if d:
+                idx = int(d)
+                if idx < len(lhs_dims):
+                    k *= lhs_dims[idx]
+    return 2.0 * op.result_elems * k
+
+
+def _operand_names(op: Op) -> List[str]:
+    # operands are inside the top-level parens after the opcode
+    start = op.line.find(op.opcode + "(")
+    if start < 0:
+        return []
+    s = op.line[start + len(op.opcode) + 1:]
+    depth = 1
+    out = []
+    buf = []
+    for ch in s:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    return _OPERANDS_RE.findall("".join(buf))
+
+
+def _op_cost(module: HloModule, op: Op, comp_costs: Dict[str, Costs]) -> Costs:
+    c = Costs()
+    opcode = op.opcode
+
+    if opcode == "fusion":
+        m = _CALLS_RE.search(op.line)
+        if m and m.group(1) in comp_costs:
+            inner = comp_costs[m.group(1)]
+            c.flops += inner.flops
+            c.transcendentals += inner.transcendentals
+            # collectives cannot live inside fusions; bytes at the boundary:
+        c.bytes += op.result_bytes
+        for o in _operand_names(op):
+            c.bytes += shape_bytes(module.result_type(o))
+        return c
+
+    if opcode == "while":
+        mcb = _COND_BODY_RE.search(op.line)
+        trips = _trip_count(module, op)
+        if mcb:
+            body = comp_costs.get(mcb.group(2))
+            cond = comp_costs.get(mcb.group(1))
+            if body:
+                c.add(body, trips)
+            if cond:
+                c.add(cond, trips)
+        return c
+
+    if opcode == "conditional":
+        names = []
+        m = _BRANCHES_RE.search(op.line)
+        if m:
+            names = [x.strip().lstrip("%") for x in m.group(1).split(",")]
+        else:
+            m = _TF_BRANCH_RE.search(op.line)
+            if m:
+                names = [m.group(1), m.group(2)]
+        best: Optional[Costs] = None
+        for n in names:
+            cc = comp_costs.get(n)
+            if cc is not None and (best is None or cc.flops > best.flops):
+                best = cc
+        if best is not None:
+            c.add(best, 1.0)
+        return c
+
+    if opcode == "call":
+        m = _TO_APPLY_RE.search(op.line)
+        if m and m.group(1) in comp_costs:
+            c.add(comp_costs[m.group(1)], 1.0)
+        return c
+
+    base_kind = opcode[:-6] if opcode.endswith("-start") else opcode
+    if base_kind in COLLECTIVE_KINDS:
+        b = op.result_bytes
+        if opcode.endswith("-done"):
+            return c  # counted at -start
+        g = _group_size(op.line)
+        mname = _META_NAME_RE.search(op.line)
+        c.collective_bytes[base_kind] = c.collective_bytes.get(base_kind, 0.0) + b
+        c.collective_counts[base_kind] = c.collective_counts.get(base_kind, 0.0) + 1
+        c.collective_sites.append(
+            (base_kind, b, g, 1.0, mname.group(1)[-120:] if mname else "?")
+        )
+        c.bytes += b
+        for o in _operand_names(op):
+            c.bytes += shape_bytes(module.result_type(o))
+        return c
+
+    if opcode in _FREE or opcode.endswith("-done"):
+        return c
+
+    # materializing kernel: bytes = operands + result
+    c.bytes += op.result_bytes
+    for o in _operand_names(op):
+        c.bytes += shape_bytes(module.result_type(o))
+
+    if opcode == "dot":
+        c.flops += _dot_flops(module, op)
+    elif opcode == "convolution":
+        # rare here; approximate as dot over the first operand
+        c.flops += _dot_flops(module, op)
+    elif opcode in ("reduce", "reduce-window"):
+        ops_ = _operand_names(op)
+        if ops_:
+            c.flops += shape_elems(module.result_type(ops_[0]))
+    elif opcode in _ELEMENTWISE:
+        c.flops += op.result_elems
+        if opcode in ("exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+                      "logistic", "cosine", "sine", "expm1", "log-plus-one"):
+            c.transcendentals += op.result_elems
+    # everything else (copy, slice, dus, gather, scatter, iota, transpose,
+    # broadcast, convert, pad, concatenate, sort, rng, ...) is bytes-only.
+    return c
+
+
+def module_costs(text: str) -> Costs:
+    """Execution-weighted totals for one compiled module (per device)."""
+    module = parse_module(text)
+    comp_costs: Dict[str, Costs] = {}
+
+    # Resolve in dependency order: iterate until fixed point (call graph is a
+    # DAG; plain iteration converges in #computations passes, but memoized
+    # recursion is cheaper).
+    def cost_of(name: str, stack=()) -> Costs:
+        if name in comp_costs:
+            return comp_costs[name]
+        if name in stack:  # defensive: cycles cannot happen in valid HLO
+            return Costs()
+        comp = module.computations.get(name)
+        if comp is None:
+            return Costs()
+        total = Costs()
+        for op in comp.ops:
+            for attr_re in (_CALLS_RE, _TO_APPLY_RE):
+                m = attr_re.search(op.line)
+                if m:
+                    cost_of(m.group(1), stack + (name,))
+            m = _COND_BODY_RE.search(op.line)
+            if m:
+                cost_of(m.group(1), stack + (name,))
+                cost_of(m.group(2), stack + (name,))
+            m = _BRANCHES_RE.search(op.line)
+            if m:
+                for n in m.group(1).split(","):
+                    cost_of(n.strip().lstrip("%"), stack + (name,))
+            m = _TF_BRANCH_RE.search(op.line)
+            if m:
+                cost_of(m.group(1), stack + (name,))
+                cost_of(m.group(2), stack + (name,))
+            total.add(_op_cost(module, op, comp_costs))
+        comp_costs[name] = total
+        return total
+
+    # reduction helper computations (to_apply of reduce/all-reduce) would be
+    # double counted if we folded them into their callers; we don't — only
+    # call/while/fusion/conditional descend.  Their own cost is negligible.
+    return cost_of(module.entry)
+
+
+def summarize(text: str) -> Dict:
+    c = module_costs(text)
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "transcendentals": c.transcendentals,
+        "collective_bytes": dict(c.collective_bytes),
+        "collective_counts": dict(c.collective_counts),
+        "collective_sites": [
+            {"kind": k, "bytes": b, "group": g, "mult": m, "op": name}
+            for k, b, g, m, name in sorted(
+                c.collective_sites, key=lambda s: -s[1] * s[3]
+            )[:64]
+        ],
+    }

@@ -1,0 +1,26 @@
+"""Production mesh definition.
+
+Defined as a FUNCTION (not a module-level constant) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and everything else (tests, benches) must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over real local devices (CPU tests / examples)."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)

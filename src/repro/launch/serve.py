@@ -1,0 +1,72 @@
+"""Serving driver: continuous batching over the wait-free paged KV table.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+      --requests 16 --max-batch 4 --verify-failover
+
+Prints per-request completions, engine throughput, page-table stats, and
+(with ``--verify-failover``) replays the deterministic op log into a twin
+manager to prove a replacement host reconstructs identical page tables.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.models import LM
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen2-7b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify-failover", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = LM(cfg)
+    params = model.init(jax.random.key(args.seed))
+    eng = ServingEngine(
+        cfg, params, max_batch=args.max_batch, max_len=args.max_len,
+        page_size=args.page_size, seed=args.seed,
+    )
+
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        shape = (plen,) if cfg.n_codebooks == 1 else (plen, cfg.n_codebooks)
+        eng.submit(Request(
+            id=i,
+            prompt=rng.integers(0, cfg.vocab, size=shape).astype(np.int32),
+            max_new_tokens=args.max_new,
+            temperature=args.temperature,
+        ))
+
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    total_new = sum(len(r.generated) for r in done.values())
+    print(f"[serve] {cfg.name}: {len(done)} requests, {total_new} tokens, "
+          f"{eng.ticks} ticks, {total_new / dt:.1f} tok/s")
+    for rid in sorted(done)[:4]:
+        print(f"  req {rid}: {done[rid].generated}")
+    print(f"[serve] page ops applied: {sum(len(o[0]) for o in eng.pages.op_log)}"
+          f" | free pages {len(eng.pages.free)}/{eng.pages.num_pages}")
+    if args.verify_failover:
+        eng.failover()
+        print("[serve] failover replay: page tables identical ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Sharding policy: how batches and decode caches map onto the mesh.
+
+Rules (with divisibility fallbacks so every assigned arch × shape lowers):
+  * batch dim -> data axes when divisible, else replicated (long_500k, B=1);
+  * decode KV caches: batch -> data, cache T axis -> "model"
+    (flash-decoding stripes) when divisible;
+  * recurrent states: batch -> data, then the first of
+    (heads, K, V) divisible by the model axis -> "model";
+  * image memory: batch -> data, token axis -> "model".
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def logical_dp(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _axis_size(mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    out = 1
+    for n in names:
+        out *= mesh.shape[n]
+    return out
+
+
+def _maybe(dim_size: int, names, mesh):
+    """names if divisible else None."""
+    return names if dim_size % _axis_size(mesh, names) == 0 else None
+
+
+def batch_pspecs(cfg: ArchConfig, B: int, mesh, *, multi_pod: bool):
+    dp = logical_dp(multi_pod)
+    bspec = _maybe(B, dp, mesh)
+    return {
+        "tokens": P(bspec, None) if cfg.n_codebooks == 1 else P(bspec, None, None),
+        "mask": P(bspec, None),
+        "memory": P(bspec, _maybe(cfg.n_img_tokens, "model", mesh), None),
+    }
+
+
+def cache_pspecs(cfg: ArchConfig, cache_shapes, B: int, mesh, *, multi_pod: bool):
+    """PartitionSpec tree matching LM.decode_init's structure."""
+    dp = logical_dp(multi_pod)
+    bs = _maybe(B, dp, mesh)
+
+    def kv_spec(shape):
+        # (L, B, Hkv, T, Dh): stripe T over model (flash-decoding)
+        L, B_, H, T, Dh = shape
+        return P(None, bs, None, _maybe(T, "model", mesh), None)
+
+    def state_spec(shape):
+        # recurrent: (L, B, ...) — find a trailing dim for "model"
+        spec = [None, bs] + [None] * (len(shape) - 2)
+        for i in range(2, len(shape)):
+            if shape[i] % _axis_size(mesh, "model") == 0 and shape[i] >= _axis_size(mesh, "model"):
+                spec[i] = "model"
+                break
+        return P(*spec)
+
+    def assign(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if keys and keys[-1] == "len":
+            return P()
+        if "kv" in keys or "shared_kv" in keys or "xkv" in keys:
+            return kv_spec(leaf.shape)
+        if "states" in keys:
+            return state_spec(leaf.shape)
+        return P()
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    leaves = [assign(path, leaf) for path, leaf in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], leaves)

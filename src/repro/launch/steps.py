@@ -1,0 +1,266 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch × shape).
+
+``build_step(cfg, kind)`` returns the pure function to be jitted:
+  * ``train``   — fwd + bwd + AdamW update (donated opt state) — the real
+                  per-step cost including the gradient reduction;
+  * ``prefill`` — forward over the full prompt, returns last-token logits;
+  * ``decode``  — one new token against a KV/recurrent cache (serve_step).
+
+``input_specs(cfg, shape_name, mesh)`` returns the matching stand-ins
+(weak-type-correct, shardable, no allocation), with NamedShardings attached
+so ``jax.jit(fn).lower(**specs)`` fixes the distribution.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES
+from repro.models import LM
+from repro.models.config import ArchConfig
+from repro.models.layers import padded_vocab
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adamw import opt_pspecs
+
+from .shardings import batch_pspecs, cache_pspecs, logical_dp
+
+
+def build_run(cfg: ArchConfig, *, multi_pod: bool, sp: bool = True,
+              run_overrides: Dict[str, Any] = None) -> Dict[str, Any]:
+    return {
+        "attn_impl": "chunked",
+        "sp": sp,
+        "remat": True,
+        "loss_chunk": 512,
+        "dp_axes": logical_dp(multi_pod),
+        # §Perf-confirmed defaults (EXPERIMENTS.md): pinned seq-parallel
+        # attention layout (-78% ICI at qwen2 train) + single-q-block
+        # chunking (8x fewer dK/dV partial reductions).  Baseline numbers
+        # are reproducible with run_overrides={"attn_seq_shard": False,
+        # "attn_block_q": 512}.
+        "attn_seq_shard": True,
+        "attn_block_q": 4096,
+        **(run_overrides or {}),
+    }
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+# per-arch microbatch (gradient-accumulation) factors for train_4k: chosen so
+# the per-device live set fits 16 GiB HBM (see EXPERIMENTS.md §Dry-run)
+TRAIN_ACCUM = {
+    "granite-moe-3b-a800m": 2,
+    "mixtral-8x7b": 2,
+    # 104B: raw (donation-free) dry-run metric reads 19.9 GiB at accum=8;
+    # the production step donates params+opt (TrainRunner) which aliases the
+    # 5.7 GiB of optimizer/param args -> ~14.2 GiB effective (fits 16 GiB).
+    # accum=16 "fixes" the raw metric but doubles the per-microbatch FSDP
+    # gathers (collective_s 541->747 s) — not worth it (EXPERIMENTS §Dry-run).
+    "command-r-plus-104b": 8,
+    "starcoder2-15b": 2,
+    "zamba2-1.2b": 2,           # 15.8 GiB at accum=1 — no headroom
+}
+
+
+def build_train_step(cfg: ArchConfig, *, multi_pod: bool, opt_cfg: AdamWConfig = None,
+                     accum: int = None, run_overrides: dict = None):
+    model = LM(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+    run = build_run(cfg, multi_pod=multi_pod, run_overrides=run_overrides)
+    accum = accum or TRAIN_ACCUM.get(cfg.name, 1)
+
+    def loss_fn(p, b):
+        return model.loss(p, b, run=run)
+
+    # pin weight gradients to the parameter layout: without this the
+    # SP-induced cross-"model" reduction of dW materializes the FULL grad on
+    # every device (all-reduce, 2(g-1)/g ring traffic); pinned, XLA emits a
+    # reduce-scatter onto the TP shard — exactly half the ICI bytes
+    # (§Perf qwen2 iteration 3).
+    gspecs = model.pspecs(multi_pod=multi_pod)
+
+    def pin_grads(g):
+        if not run.get("sp"):
+            return g
+        return jax.tree.map(
+            lambda t, s: jax.lax.with_sharding_constraint(t, s), g, gspecs
+        )
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = pin_grads(grads)
+        else:
+            # microbatch accumulation: activations live for one microbatch at
+            # a time; gradients accumulate in f32 (ZeRO-sharded, tiny).
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch,
+            )
+            g0 = pin_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ))
+
+            def body(carry, mb):
+                loss_sum, gsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g = pin_grads(g)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (loss_sum + l, gsum), None
+
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), g0), micro
+            )
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        new_params, new_opt, metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    return train_step, model, run
+
+
+def build_prefill_step(cfg: ArchConfig, *, multi_pod: bool, run_overrides: dict = None):
+    model = LM(cfg)
+    run = {**build_run(cfg, multi_pod=multi_pod, run_overrides=run_overrides),
+           "remat": False}
+
+    def prefill_step(params, batch):
+        states = (
+            model.init_recurrent_states(batch["tokens"].shape[0], cfg.param_dtype)
+            if model.block_kind in ("rwkv6", "mamba2")
+            else None
+        )
+        hid, _, new_states = model.hidden_states(
+            params, batch["tokens"], memory=batch.get("memory"), run=run,
+            states=states,
+        )
+        logits = model._logits(params, hid[:, -1:])
+        return logits
+
+    return prefill_step, model, run
+
+
+def build_decode_step(cfg: ArchConfig, *, multi_pod: bool, run_overrides: dict = None):
+    model = LM(cfg)
+    run = {**build_run(cfg, multi_pod=multi_pod, run_overrides=run_overrides),
+           "remat": False}
+
+    def decode_step(params, tokens, cache, memory=None):
+        return model.decode_step(params, tokens, cache, memory=memory, run=run)
+
+    return decode_step, model, run
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins with shardings)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _tree_sds(shapes_tree, pspec_tree, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        shapes_tree,
+        pspec_tree,
+    )
+
+
+def param_specs(cfg: ArchConfig, mesh, *, multi_pod: bool):
+    model = LM(cfg)
+    return _tree_sds(model.shapes(), model.pspecs(multi_pod=multi_pod), mesh)
+
+
+def opt_state_specs(cfg: ArchConfig, mesh, *, multi_pod: bool):
+    model = LM(cfg)
+    pshapes = model.shapes()
+    ppspecs = model.pspecs(multi_pod=multi_pod)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    shapes = {
+        "m": jax.tree.map(f32, pshapes),
+        "v": jax.tree.map(f32, pshapes),
+        "master": jax.tree.map(f32, pshapes),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    pspecs = opt_pspecs(ppspecs)
+    return _tree_sds(shapes, pspecs, mesh)
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str, mesh, *, multi_pod: bool):
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    dp = logical_dp(multi_pod)
+    specs = batch_pspecs(cfg, B, mesh, multi_pod=multi_pod)
+
+    tok_shape = (B, S) if cfg.n_codebooks == 1 else (B, S, cfg.n_codebooks)
+    out = {
+        "tokens": _sds(tok_shape, jnp.int32, mesh, specs["tokens"]),
+        "targets": _sds(tok_shape, jnp.int32, mesh, specs["tokens"]),
+        "mask": _sds((B, S), jnp.float32, mesh, specs["mask"]),
+    }
+    if cfg.xattn_every:
+        out["memory"] = _sds(
+            (B, cfg.n_img_tokens, cfg.d_model), cfg.param_dtype, mesh, specs["memory"]
+        )
+    return out
+
+
+def cache_specs(cfg: ArchConfig, shape_name: str, mesh, *, multi_pod: bool):
+    """Decode-cache stand-ins mirroring LM.decode_init's structure."""
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    model = LM(cfg)
+    shapes = jax.eval_shape(
+        functools.partial(model.decode_init, B, S)
+    )
+    pspecs = cache_pspecs(cfg, shapes, B, mesh, multi_pod=multi_pod)
+    return _tree_sds(shapes, pspecs, mesh)
+
+
+def decode_token_specs(cfg: ArchConfig, shape_name: str, mesh, *, multi_pod: bool):
+    sh = SHAPES[shape_name]
+    B = sh["global_batch"]
+    specs = batch_pspecs(cfg, B, mesh, multi_pod=multi_pod)
+    tok_shape = (B, 1) if cfg.n_codebooks == 1 else (B, 1, cfg.n_codebooks)
+    return _sds(tok_shape, jnp.int32, mesh, specs["tokens"])
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, mesh, *, multi_pod: bool):
+    """Everything jit.lower needs for the given cell, as kwargs."""
+    kind = SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return {
+            "params": param_specs(cfg, mesh, multi_pod=multi_pod),
+            "opt_state": opt_state_specs(cfg, mesh, multi_pod=multi_pod),
+            "batch": batch_specs(cfg, shape_name, mesh, multi_pod=multi_pod),
+        }
+    if kind == "prefill":
+        return {
+            "params": param_specs(cfg, mesh, multi_pod=multi_pod),
+            "batch": batch_specs(cfg, shape_name, mesh, multi_pod=multi_pod),
+        }
+    # decode
+    out = {
+        "params": param_specs(cfg, mesh, multi_pod=multi_pod),
+        "tokens": decode_token_specs(cfg, shape_name, mesh, multi_pod=multi_pod),
+        "cache": cache_specs(cfg, shape_name, mesh, multi_pod=multi_pod),
+    }
+    if cfg.xattn_every:
+        sh = SHAPES[shape_name]
+        specs = batch_pspecs(cfg, sh["global_batch"], mesh, multi_pod=multi_pod)
+        out["memory"] = _sds(
+            (sh["global_batch"], cfg.n_img_tokens, cfg.d_model),
+            cfg.param_dtype, mesh, specs["memory"],
+        )
+    return out

@@ -1,0 +1,4 @@
+from .config import ArchConfig, MoEConfig, SSMConfig, reduced_for_smoke
+from .lm import LM
+
+__all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "reduced_for_smoke", "LM"]

@@ -1,0 +1,349 @@
+"""Residual blocks for every assigned family.
+
+Block kinds:
+  * ``attn``   — pre-norm attention + MLP (dense transformers, shared block
+                 of zamba2, musicgen backbone).
+  * ``moe``    — pre-norm attention + MoE FFN (mixtral, granite).
+  * ``xattn``  — tanh-gated cross-attention to image tokens (llama-3.2-v).
+  * ``rwkv6``  — Finch time-mix (data-dependent per-channel decay, strict
+                 readout + bonus) + channel-mix.
+  * ``mamba2`` — SSD block (conv + scalar-decay scan + gated norm).
+
+Each kind provides ``*_meta(cfg)`` / ``*_apply(params, cfg, x, ...)`` and a
+decode-state initializer.  Decode states are pytrees of per-layer tensors so
+the full-model decode can lax.scan over stacked layers.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ref import (
+    linear_scan_chunked,
+    linear_scan_step,
+)
+
+from .config import ArchConfig
+from .layers import (
+    attn_apply,
+    attn_meta,
+    mlp_apply,
+    mlp_meta,
+    moe_apply,
+    moe_apply_shardmap,
+    moe_meta,
+    norm_apply,
+    norm_meta,
+)
+from .module import ParamMeta
+
+F32 = jnp.float32
+
+
+def _pick_chunk(S: int, target: int = 64) -> int:
+    """Largest power-of-two chunk ≤ target that divides S."""
+    c = 1
+    while c * 2 <= min(target, S) and S % (c * 2) == 0:
+        c *= 2
+    return c
+
+
+# ---------------------------------------------------------------------------
+# attention (+MLP / +MoE) block
+# ---------------------------------------------------------------------------
+
+def attn_block_meta(cfg: ArchConfig, *, moe: bool = False):
+    return {
+        "ln1": norm_meta(cfg),
+        "attn": attn_meta(cfg),
+        "ln2": norm_meta(cfg),
+        "ffn": moe_meta(cfg) if moe else mlp_meta(cfg),
+    }
+
+
+def attn_block_apply(p, cfg: ArchConfig, x, *, moe=False, positions=None,
+                     kv_cache=None, attn_impl="chunked",
+                     dp_axes=("data",), shard=False, seq_spec=None,
+                     block_q=512, block_k=512):
+    h, new_cache = attn_apply(
+        p["attn"], cfg, norm_apply(p["ln1"], cfg, x),
+        positions=positions, kv_cache=kv_cache, attn_impl=attn_impl,
+        seq_spec=seq_spec, block_q=block_q, block_k=block_k,
+    )
+    x = x + h
+    if moe:
+        engine = moe_apply_shardmap if shard else moe_apply
+        kw = {"dp_axes": dp_axes} if shard else {}
+        f, aux = engine(p["ffn"], cfg, norm_apply(p["ln2"], cfg, x), **kw)
+    else:
+        f, aux = mlp_apply(p["ffn"], cfg, norm_apply(p["ln2"], cfg, x)), jnp.float32(0.0)
+    return x + f, new_cache, aux
+
+
+def attn_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, hkv, max_len, dh), dtype),
+        "v": jnp.zeros((batch, hkv, max_len, dh), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cross-attention block (vlm)
+# ---------------------------------------------------------------------------
+
+def xattn_block_meta(cfg: ArchConfig):
+    return {
+        "ln1": norm_meta(cfg),
+        "attn": attn_meta(cfg, cross=True),
+        "ln2": norm_meta(cfg),
+        "ffn": mlp_meta(cfg),
+        "ffn_gate": ParamMeta((1,), F32, (None,), "zeros"),
+    }
+
+
+def xattn_block_apply(p, cfg: ArchConfig, x, memory=None, kv_override=None):
+    h, _ = attn_apply(
+        p["attn"], cfg, norm_apply(p["ln1"], cfg, x),
+        memory=memory, kv_override=kv_override,
+    )
+    x = x + h
+    f = mlp_apply(p["ffn"], cfg, norm_apply(p["ln2"], cfg, x))
+    return x + f * jnp.tanh(p["ffn_gate"]).astype(f.dtype)
+
+
+def xattn_precompute_kv(p, cfg: ArchConfig, memory):
+    """Project the (fixed) image memory to K/V heads once for decode."""
+    from .layers import _split_heads
+
+    k = _split_heads(
+        jnp.einsum("bsd,dh->bsh", memory, p["attn"]["wk"]), cfg.n_kv_heads, cfg.head_dim
+    )
+    v = _split_heads(
+        jnp.einsum("bsd,dh->bsh", memory, p["attn"]["wv"]), cfg.n_kv_heads, cfg.head_dim
+    )
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch) block
+# ---------------------------------------------------------------------------
+
+def _rwkv_heads(cfg: ArchConfig):
+    hd = cfg.ssm.head_dim
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def rwkv6_block_meta(cfg: ArchConfig):
+    d, dt = cfg.d_model, cfg.param_dtype
+    lora = cfg.ssm.decay_lora
+    H, hd = _rwkv_heads(cfg)
+    return {
+        "ln1": norm_meta(cfg),
+        "ln2": norm_meta(cfg),
+        # time-mix
+        "mu": ParamMeta((5, d), F32, (None, None), "zeros"),   # r,k,v,w,g lerps
+        "wr": ParamMeta((d, d), dt, ("fsdp", "tp"), "normal"),
+        "wk": ParamMeta((d, d), dt, ("fsdp", "tp"), "normal"),
+        "wv": ParamMeta((d, d), dt, ("fsdp", "tp"), "normal"),
+        "wg": ParamMeta((d, d), dt, ("fsdp", "tp"), "normal"),
+        "wo": ParamMeta((d, d), dt, ("tp", "fsdp"), "normal"),
+        "w0": ParamMeta((d,), F32, (None,), "zeros"),          # decay base
+        "wA": ParamMeta((d, lora), F32, ("fsdp", None), "normal"),
+        "wB": ParamMeta((lora, d), F32, (None, "fsdp"), "normal"),
+        "bonus": ParamMeta((H, hd), F32, (None, None), "zeros"),
+        "gn": ParamMeta((d,), F32, (None,), "ones"),           # per-head groupnorm
+        # channel-mix
+        "cmu": ParamMeta((2, d), F32, (None, None), "zeros"),  # r,k lerps
+        "cwr": ParamMeta((d, d), dt, ("fsdp", "tp"), "normal"),
+        "cwk": ParamMeta((d, cfg.d_ff), dt, ("fsdp", "tp"), "normal"),
+        "cwv": ParamMeta((cfg.d_ff, d), dt, ("tp", "fsdp"), "normal"),
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B,S,d); prev: (B,d) last token of previous segment (decode state)."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def rwkv6_block_apply(p, cfg: ArchConfig, x, state=None, *, chunk=64):
+    """state: None (fresh) or dict(tshift (B,d), cshift (B,d), h (B,H,K,V)).
+    S > 1 runs the chunked scan (training/prefill, state-continuing);
+    S == 1 with a state runs the O(1) recurrent step (decode)."""
+    B, S, d = x.shape
+    H, hd = _rwkv_heads(cfg)
+    decode = state is not None and S == 1
+    tprev = jnp.zeros((B, d), x.dtype) if state is None else state["tshift"].astype(x.dtype)
+    cprev = jnp.zeros((B, d), x.dtype) if state is None else state["cshift"].astype(x.dtype)
+    h0 = None if state is None else state["h"]
+
+    # ---- time mix ----
+    xa = norm_apply(p["ln1"], cfg, x)
+    xs = _token_shift(xa, tprev)
+    mu = p["mu"].astype(xa.dtype)
+    mix = lambda i: xa + (xs - xa) * mu[i]
+    r = jnp.einsum("bsd,dk->bsk", mix(0), p["wr"])
+    kk = jnp.einsum("bsd,dk->bsk", mix(1), p["wk"])
+    vv = jnp.einsum("bsd,dk->bsk", mix(2), p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,dk->bsk", mix(4), p["wg"]).astype(F32)).astype(xa.dtype)
+    # data-dependent decay (low-rank, Finch)
+    dw = jnp.tanh(jnp.einsum("bsd,dl->bsl", mix(3).astype(F32), p["wA"]))
+    dw = jnp.einsum("bsl,ld->bsd", dw, p["wB"]) + p["w0"]
+    w = jnp.exp(-jnp.exp(dw))                                   # (B,S,d) in (0,1)
+
+    to_heads = lambda t: t.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    rh, kh, vh, wh = to_heads(r), to_heads(kk), to_heads(vv), to_heads(w.astype(x.dtype))
+
+    if decode:
+        y1, hT = linear_scan_step(rh[:, :, 0], kh[:, :, 0], vh[:, :, 0],
+                                  wh[:, :, 0], h0, strict=True)
+        y = y1[:, :, None, :]
+    else:
+        y, hT = linear_scan_chunked(
+            rh, kh, vh, wh, h0=h0, chunk=_pick_chunk(S, chunk), strict=True
+        )
+    # bonus: y += (r · (u ⊙ k)) v
+    u = p["bonus"].astype(F32)
+    s_bonus = jnp.einsum("bhsk,hk,bhsk->bhs", rh.astype(F32), u, kh.astype(F32))
+    y = y.astype(F32) + s_bonus[..., None] * vh.astype(F32)
+
+    # per-head groupnorm then output proj
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d) * p["gn"]
+    y = (y.astype(x.dtype) * g)
+    x = x + jnp.einsum("bsd,dk->bsk", y, p["wo"])
+
+    # ---- channel mix ----
+    xc = norm_apply(p["ln2"], cfg, x)
+    xcs = _token_shift(xc, cprev)
+    cmu = p["cmu"].astype(xc.dtype)
+    xr = xc + (xcs - xc) * cmu[0]
+    xk = xc + (xcs - xc) * cmu[1]
+    kc = jnp.einsum("bsd,df->bsf", xk, p["cwk"])
+    kc = jnp.square(jax.nn.relu(kc.astype(F32))).astype(xc.dtype)
+    vc = jnp.einsum("bsf,fd->bsd", kc, p["cwv"])
+    rc = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", xr, p["cwr"]).astype(F32)).astype(xc.dtype)
+    x = x + rc * vc
+
+    new_state = {"tshift": xa[:, -1, :], "cshift": xc[:, -1, :], "h": hT}
+    return x, new_state
+
+
+def rwkv6_state_init(cfg: ArchConfig, batch: int, dtype):
+    H, hd = _rwkv_heads(cfg)
+    return {
+        "tshift": jnp.zeros((batch, cfg.d_model), dtype),
+        "cshift": jnp.zeros((batch, cfg.d_model), dtype),
+        "h": jnp.zeros((batch, H, hd, hd), F32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ArchConfig):
+    d_inner = 2 * cfg.d_model
+    hd = cfg.ssm.head_dim
+    assert d_inner % hd == 0
+    H = d_inner // hd
+    N = cfg.ssm.state
+    return d_inner, H, hd, N
+
+
+def mamba2_block_meta(cfg: ArchConfig):
+    d, dt = cfg.d_model, cfg.param_dtype
+    d_inner, H, hd, N = _mamba_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "ln": norm_meta(cfg),
+        "in_proj": ParamMeta((d, 2 * d_inner + 2 * N + H), dt, ("fsdp", "tp"), "normal"),
+        "conv_w": ParamMeta((cfg.ssm.conv, conv_dim), F32, (None, "tp"), "normal", scale=0.5),
+        "conv_b": ParamMeta((conv_dim,), F32, ("tp",), "zeros"),
+        "A_log": ParamMeta((H,), F32, (None,), "zeros"),
+        "D": ParamMeta((H,), F32, (None,), "ones"),
+        "dt_bias": ParamMeta((H,), F32, (None,), "zeros"),
+        "gn": ParamMeta((d_inner,), F32, ("tp",), "ones"),
+        "out_proj": ParamMeta((d_inner, d), dt, ("tp", "fsdp"), "normal"),
+    }
+
+
+def _causal_conv(x, w, b, prev):
+    """x: (B,S,C); w: (K,C) depthwise; prev: (B,K-1,C) left context."""
+    K = w.shape[0]
+    xp = jnp.concatenate([prev, x], axis=1)                    # (B, S+K-1, C)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+        for i in range(K)
+    )
+    return out + b.astype(x.dtype), xp[:, -(K - 1):, :]
+
+
+def mamba2_block_apply(p, cfg: ArchConfig, x, state=None, *, chunk=64):
+    """state: None (fresh) or dict(conv (B,K-1,C), h (B,H,N,hd)).
+    S > 1 runs the chunked scan; S == 1 with a state runs the decode step."""
+    B, S, d = x.shape
+    d_inner, H, hd, N = _mamba_dims(cfg)
+    decode = state is not None and S == 1
+
+    xa = norm_apply(p["ln"], cfg, x)
+    proj = jnp.einsum("bsd,dp->bsp", xa, p["in_proj"])
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [d_inner + 2 * N], axis=-1)   # conv input, (B,S,H)
+
+    conv_prev = (
+        jnp.zeros((B, cfg.ssm.conv - 1, d_inner + 2 * N), xbc.dtype)
+        if state is None else state["conv"].astype(xbc.dtype)
+    )
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_prev)
+    xbc = jax.nn.silu(xbc.astype(F32)).astype(x.dtype)
+    xin, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    dt_a = jax.nn.softplus(dt_raw.astype(F32) + p["dt_bias"])     # (B,S,H)
+    a = jnp.exp(-jnp.exp(p["A_log"])[None, None] * dt_a)          # (B,S,H) decay
+
+    # map onto the generalized scan: per head, k=B, q=C (shared), v=dt*x
+    xh = xin.reshape(B, S, H, hd).transpose(0, 2, 1, 3)           # (B,H,S,hd)
+    vh = xh * dt_a.transpose(0, 2, 1)[..., None].astype(xh.dtype)
+    kh = jnp.broadcast_to(Bmat[:, None], (B, H, S, N)).astype(xh.dtype)
+    qh = jnp.broadcast_to(Cmat[:, None], (B, H, S, N)).astype(xh.dtype)
+    wh = jnp.broadcast_to(
+        a.transpose(0, 2, 1)[..., None], (B, H, S, N)
+    ).astype(xh.dtype)
+
+    h0 = None if state is None else state["h"]
+    if decode:
+        y1, hT = linear_scan_step(qh[:, :, 0], kh[:, :, 0], vh[:, :, 0], wh[:, :, 0], h0)
+        y = y1[:, :, None, :]
+    else:
+        y, hT = linear_scan_chunked(qh, kh, vh, wh, h0=h0, chunk=_pick_chunk(S, chunk))
+
+    y = y.astype(F32) + p["D"][None, :, None, None] * xh.astype(F32)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d_inner)
+
+    # gated RMSNorm (mamba2) then out proj (gate silu in f32: §Perf zamba2
+    # it3 tested a bf16 gate to shrink the backward's f32 dproj gather —
+    # refuted, zero byte change — so the f32 gate stays for numerics)
+    y = y * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["gn"]
+    out = jnp.einsum("bsp,pd->bsd", y.astype(x.dtype), p["out_proj"])
+
+    new_state = {"conv": conv_state, "h": hT}
+    return x + out, new_state
+
+
+def mamba2_state_init(cfg: ArchConfig, batch: int, dtype):
+    d_inner, H, hd, N = _mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.conv - 1, d_inner + 2 * N), dtype),
+        "h": jnp.zeros((batch, H, N, hd), F32),
+    }

@@ -1,0 +1,568 @@
+"""Full decoder LM assembly for every assigned architecture family.
+
+Compile-size discipline (one CPU must compile 512-device SPMD programs):
+  * parameters for the repeated stack are **stacked** (leading layer dim) and
+    the stack runs under ``lax.scan`` — HLO size is layer-count independent;
+  * heterogeneous interleaves (zamba2 shared attention, llama-3.2-vision
+    cross-attention) stay inside the same scan via ``lax.cond`` on the layer
+    index (one copy of each block kind in the HLO);
+  * attention is chunked (linear memory) and the loss is computed in
+    sequence chunks so the (B, S, vocab) logits tensor never materializes.
+
+Sharding: weights carry logical specs (module.py); activations get
+sequence-parallel constraints at block boundaries and head-parallel
+constraints inside attention when ``run["sp"]`` is set.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import blocks as B
+from . import layers as L
+from .config import ArchConfig
+from .module import (
+    ParamMeta,
+    build_params,
+    build_params_stacked,
+    build_pspecs,
+    build_shapes,
+    stack_meta,
+)
+
+F32 = jnp.float32
+
+DEFAULT_RUN: Dict[str, Any] = {
+    "attn_impl": "chunked",   # "chunked" | "kernel"
+    "sp": False,              # sequence-parallel activation constraints
+    "remat": True,            # per-layer activation checkpointing
+    "loss_chunk": 512,        # sequence chunk for the xent loss
+    "dp_axes": ("data",),     # data axes for activation constraints
+}
+
+
+def _constrain(x, spec, run):
+    if run.get("sp"):
+        return jax.lax.with_sharding_constraint(x, spec)
+    return x
+
+
+class LM:
+    """Config-driven decoder LM: meta/init/loss/forward/decode."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        fam = cfg.family
+        if fam in ("dense", "moe", "audio", "vlm"):
+            self.block_kind = "attn"
+        elif fam == "ssm":
+            self.block_kind = "rwkv6"
+        elif fam == "hybrid":
+            self.block_kind = "mamba2"
+        else:
+            raise ValueError(fam)
+
+    # -- parameter metadata -------------------------------------------------
+    def meta(self):
+        cfg = self.cfg
+        if self.block_kind == "attn":
+            block = B.attn_block_meta(cfg, moe=cfg.moe is not None)
+        elif self.block_kind == "rwkv6":
+            block = B.rwkv6_block_meta(cfg)
+        else:
+            block = B.mamba2_block_meta(cfg)
+
+        m = {
+            "embed": L.embed_meta(cfg),
+            "blocks": stack_meta(block, cfg.n_layers),
+            "ln_f": L.norm_meta(cfg),
+        }
+        if cfg.shared_attn_every:
+            m["shared_attn"] = B.attn_block_meta(cfg, moe=False)
+        if cfg.xattn_every:
+            n_x = cfg.n_layers // cfg.xattn_every
+            m["xattn"] = stack_meta(B.xattn_block_meta(cfg), n_x)
+        return m
+
+    def init(self, key):
+        cfg = self.cfg
+        m = self.meta()
+        keys = jax.random.split(key, 4)
+        params = {
+            "embed": build_params(m["embed"], keys[0]),
+            "ln_f": build_params(m["ln_f"], keys[1]),
+        }
+        if self.block_kind == "attn":
+            block = B.attn_block_meta(cfg, moe=cfg.moe is not None)
+        elif self.block_kind == "rwkv6":
+            block = B.rwkv6_block_meta(cfg)
+        else:
+            block = B.mamba2_block_meta(cfg)
+        params["blocks"] = build_params_stacked(block, cfg.n_layers, keys[2])
+        if cfg.shared_attn_every:
+            params["shared_attn"] = build_params(
+                B.attn_block_meta(cfg, moe=False), keys[3]
+            )
+        if cfg.xattn_every:
+            n_x = cfg.n_layers // cfg.xattn_every
+            params["xattn"] = build_params_stacked(
+                B.xattn_block_meta(cfg), n_x, keys[3]
+            )
+        return params
+
+    def shapes(self):
+        return build_shapes(self.meta())
+
+    def pspecs(self, *, multi_pod: bool):
+        return build_pspecs(self.meta(), multi_pod=multi_pod)
+
+    # -- forward (training / prefill) ---------------------------------------
+    def hidden_states(self, params, tokens, *, memory=None, run=None,
+                      positions=None, states=None):
+        """Embeds and runs the block stack.  Returns (hidden, aux_loss,
+        new_states) — states are the recurrent decode states (ssm/hybrid)
+        produced even in training (used by prefill-to-decode handoff)."""
+        cfg = self.cfg
+        run = {**DEFAULT_RUN, **(run or {})}
+        dp = run["dp_axes"]
+
+        x = L.embed_apply(params["embed"], cfg, tokens)
+        if not cfg.rope and self.block_kind == "attn":
+            S = x.shape[1]
+            pos = positions if positions is not None else jnp.arange(S)
+            x = x + L.sinusoid_embed(pos, cfg.d_model)[None].astype(x.dtype)
+
+        if self.block_kind == "attn":
+            sp_spec = P(dp, "model", None)       # sequence-parallel residual
+        else:
+            sp_spec = P(dp, None, "model")       # d-sharded (see _recurrent_stack)
+        x = _constrain(x, sp_spec, run)
+
+        if self.block_kind == "attn":
+            out = self._attn_stack(params, x, memory, run, positions)
+        elif self.block_kind == "rwkv6":
+            out = self._recurrent_stack(params, x, run, B.rwkv6_block_apply, states)
+        else:
+            out = self._hybrid_stack(params, x, run, positions, states)
+        x, aux, new_states = out
+        x = L.norm_apply(params["ln_f"], cfg, x)
+        return x, aux, new_states
+
+    def _attn_stack(self, params, x, memory, run, positions):
+        cfg = self.cfg
+        moe = cfg.moe is not None
+        sp_spec = P(run["dp_axes"], "model", None)
+
+        def body(carry, layer_params):
+            h = carry
+            h2, _, aux = B.attn_block_apply(
+                layer_params, cfg, h, moe=moe, positions=positions,
+                attn_impl=run["attn_impl"],
+                dp_axes=run["dp_axes"], shard=run.get("sp", False),
+                seq_spec=(
+                    (run["dp_axes"], "model")
+                    if run.get("sp") and run.get("attn_seq_shard") else None
+                ),
+                block_q=run.get("attn_block_q", 512),
+                block_k=run.get("attn_block_k", 512),
+            )
+            # sequence-parallel residual boundary: the scan carry (the only
+            # per-layer tensor the remat'd backward stores) is sharded over
+            # (data × model)
+            h2 = _constrain(h2, sp_spec, run)
+            return h2, aux
+
+        if cfg.xattn_every is None:
+            if run["remat"]:
+                body = jax.checkpoint(body)
+            x, auxs = jax.lax.scan(body, x, params["blocks"])
+            return x, jnp.sum(auxs), None
+
+        # VLM: group scan — `every` self-attn layers then one cross-attn
+        # block per group.  A per-layer lax.cond would (a) schedule a branch
+        # dispatch every layer and (b) make the compiled while body carry
+        # the cross-attn cost on every iteration — the group structure is
+        # both the cheaper program and the honestly-countable one.
+        every = cfg.xattn_every
+        n_groups = cfg.n_layers // every
+
+        if run["remat"]:
+            # nested remat: the group backward recomputes its layers one at
+            # a time — without the inner checkpoint all `every` layers'
+            # attention buffers are live at once during the group's bwd
+            # (measured 22 GiB/dev at llama-3.2-vision train_4k).
+            body = jax.checkpoint(body)
+
+        def group_body(carry, xs):
+            h = carry
+            glp, xp = xs
+            h, auxs = jax.lax.scan(body, h, glp)
+            h = B.xattn_block_apply(xp, cfg, h, memory)
+            h = _constrain(h, sp_spec, run)
+            return h, jnp.sum(auxs)
+
+        if run["remat"]:
+            group_body = jax.checkpoint(group_body)
+        grouped = jax.tree.map(
+            lambda a: a[: n_groups * every].reshape(
+                (n_groups, every) + a.shape[1:]
+            ),
+            params["blocks"],
+        )
+        x, auxs = jax.lax.scan(group_body, x, (grouped, params["xattn"]))
+        return x, jnp.sum(auxs), None
+
+    def _recurrent_stack(self, params, x, run, block_apply, states):
+        cfg = self.cfg
+        # SSM stacks: shard d_model (not seq) over "model".  The recurrence
+        # chunk-scans slice the seq dim; with seq sharded over "model" XLA
+        # all-gathers the full residual (B_dev×S×d, 537 MB at zamba2
+        # train_4k) per layer per pass — d-sharding keeps every slice local
+        # (§Perf iteration: zamba2/rwkv6).
+        sp_spec = P(run["dp_axes"], None, "model")
+
+        def body(h, xs):
+            layer_params, st = xs
+            h2, new_st = block_apply(layer_params, cfg, h, state=st)
+            h2 = _constrain(h2, sp_spec, run)
+            return h2, new_st
+
+        if run["remat"]:
+            body = jax.checkpoint(body)
+        x, new_states = jax.lax.scan(body, x, (params["blocks"], states))
+        return x, jnp.float32(0.0), new_states
+
+    def _hybrid_stack(self, params, x, run, positions, states):
+        """Zamba2-style: group scan of `every` mamba layers + the shared
+        attention block once per group (+ a mamba tail for the remainder).
+        A per-layer lax.cond would schedule (and cost) the attention branch
+        on every one of the 38 iterations instead of 6."""
+        cfg = self.cfg
+        every = cfg.shared_attn_every
+        # d-sharded residual for the mamba backbone (see _recurrent_stack)
+        sp_spec = P(run["dp_axes"], None, "model")
+        n_groups = cfg.n_layers // every
+        n_head = n_groups * every
+
+        def mamba_body(h, xs):
+            layer_params, st = xs
+            h2, new_st = B.mamba2_block_apply(layer_params, cfg, h, state=st)
+            return _constrain(h2, sp_spec, run), new_st
+
+        def group_body(h, xs):
+            glp, gst = xs
+            h, new_st = jax.lax.scan(mamba_body, h, (glp, gst))
+            # seq_spec deliberately None: the d-sharded mamba residual feeds
+            # this block, and pinning the seq-parallel attention layout here
+            # measured +2.1 s of ICI (§Perf zamba2 it3b) — propagation wins.
+            h, _, _ = B.attn_block_apply(
+                params["shared_attn"], cfg, h, moe=False,
+                positions=positions, attn_impl=run["attn_impl"],
+            )
+            return _constrain(h, sp_spec, run), new_st
+
+        mamba_tail = mamba_body
+        if run["remat"]:
+            group_body = jax.checkpoint(group_body)
+            mamba_tail = jax.checkpoint(mamba_body)
+
+        group = lambda a: a[:n_head].reshape((n_groups, every) + a.shape[1:])
+        x, ns_head = jax.lax.scan(
+            group_body, x,
+            (jax.tree.map(group, params["blocks"]), jax.tree.map(group, states)),
+        )
+        ns_head = jax.tree.map(
+            lambda a: a.reshape((n_head,) + a.shape[2:]), ns_head
+        )
+        if n_head == cfg.n_layers:
+            return x, jnp.float32(0.0), ns_head
+        tail = lambda a: a[n_head:]
+        x, ns_tail = jax.lax.scan(
+            mamba_tail, x,
+            (jax.tree.map(tail, params["blocks"]), jax.tree.map(tail, states)),
+        )
+        new_states = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), ns_head, ns_tail
+        )
+        return x, jnp.float32(0.0), new_states
+
+    def init_recurrent_states(self, batch: int, dtype):
+        """Stacked per-layer recurrent states for ssm/hybrid stacks."""
+        cfg = self.cfg
+        if self.block_kind == "rwkv6":
+            one = B.rwkv6_state_init(cfg, batch, dtype)
+        elif self.block_kind == "mamba2":
+            one = B.mamba2_state_init(cfg, batch, dtype)
+        else:
+            return None
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one
+        )
+
+    # -- loss ----------------------------------------------------------------
+    def loss(self, params, batch, *, run=None):
+        """batch: dict(tokens (B,S) or (B,S,ncb), targets same, mask (B,S))."""
+        cfg = self.cfg
+        run = {**DEFAULT_RUN, **(run or {})}
+        tokens, targets = batch["tokens"], batch["targets"]
+        mask = batch.get("mask")
+        memory = batch.get("memory")
+        states = (
+            self.init_recurrent_states(tokens.shape[0], cfg.param_dtype)
+            if self.block_kind in ("rwkv6", "mamba2")
+            else None
+        )
+        hid, aux, _ = self.hidden_states(
+            params, tokens, memory=memory, run=run, states=states
+        )
+        nll = _xent_chunked(
+            params["embed"], cfg, hid, targets, mask, chunk=run["loss_chunk"]
+        )
+        loss = nll + 0.01 * aux
+        return loss
+
+    # -- decode ---------------------------------------------------------------
+    def decode_init(self, batch: int, max_len: int, *, params=None, memory=None):
+        """Allocate the decode cache pytree.  For vlm archs pass params +
+        image memory: cross-attention K/V are projected once here instead of
+        per decode step."""
+        cfg = self.cfg
+        dt = cfg.param_dtype
+        cache: Dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+        if self.block_kind == "attn":
+            kv_len = min(max_len, cfg.window) if cfg.window else max_len
+            cache["kv"] = {
+                "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, kv_len, cfg.head_dim), dt),
+                "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, kv_len, cfg.head_dim), dt),
+            }
+            if cfg.xattn_every and memory is not None and params is not None:
+                n_x = cfg.n_layers // cfg.xattn_every
+                xks, xvs = [], []
+                for i in range(n_x):
+                    xp = jax.tree.map(lambda a: a[i], params["xattn"])
+                    xk, xv = B.xattn_precompute_kv(xp, cfg, memory)
+                    xks.append(xk)
+                    xvs.append(xv)
+                cache["xkv"] = {"k": jnp.stack(xks), "v": jnp.stack(xvs)}
+        elif self.block_kind == "rwkv6":
+            cache["states"] = self.init_recurrent_states(batch, dt)
+        else:
+            cache["states"] = self.init_recurrent_states(batch, dt)
+            n_occ = cfg.n_layers // cfg.shared_attn_every
+            kv_len = min(max_len, cfg.window) if cfg.window else max_len
+            cache["shared_kv"] = {
+                "k": jnp.zeros((n_occ, batch, cfg.n_kv_heads, kv_len, cfg.head_dim), dt),
+                "v": jnp.zeros((n_occ, batch, cfg.n_kv_heads, kv_len, cfg.head_dim), dt),
+            }
+        return cache
+
+    def decode_step(self, params, tokens, cache, *, memory=None, run=None):
+        """One token per sequence. tokens: (B, 1) or (B, 1, ncb)."""
+        cfg = self.cfg
+        run = {**DEFAULT_RUN, **(run or {}), "remat": False}
+        pos = cache["len"]
+        x = L.embed_apply(params["embed"], cfg, tokens)
+        if not cfg.rope and self.block_kind == "attn":
+            x = x + L.sinusoid_embed(pos[None], cfg.d_model)[None].astype(x.dtype)
+
+        if self.block_kind == "attn":
+            x, new_cache = self._attn_decode(params, x, cache, memory, run)
+        elif self.block_kind == "rwkv6":
+            def body(h, xs):
+                lp, st = xs
+                h2, nst = B.rwkv6_block_apply(lp, cfg, h, state=st)
+                return h2, nst
+            x, nstates = jax.lax.scan(body, x, (params["blocks"], cache["states"]))
+            new_cache = {**cache, "states": nstates, "len": pos + 1}
+        else:
+            x, new_cache = self._hybrid_decode(params, x, cache, run)
+
+        x = L.norm_apply(params["ln_f"], cfg, x)
+        logits = self._logits(params, x)
+        return logits, new_cache
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.n_codebooks > 1:
+            outs = [
+                L.logits_apply(params["embed"], cfg, x, codebook=c)
+                for c in range(cfg.n_codebooks)
+            ]
+            return jnp.stack(outs, axis=2)  # (B, S, ncb, Vp)
+        return L.logits_apply(params["embed"], cfg, x)
+
+    def _attn_decode(self, params, x, cache, memory, run):
+        cfg = self.cfg
+        pos = cache["len"]
+        positions = pos + jnp.arange(x.shape[1])
+        has_x = cfg.xattn_every and "xkv" in cache
+
+        start = cache.get("start")  # (B,) slot admission offsets (serving)
+        # decode hidden is tiny (B,1,d): keeping it replicated over "model"
+        # removes the per-layer all-gather before each projection (§Perf:
+        # mixtral decode_32k iteration) at the cost of nothing — the psum
+        # after row-sharded projections already exists.
+        if run.get("decode_pin_replicated"):
+            pin = lambda t: jax.lax.with_sharding_constraint(
+                t, P(run["dp_axes"], None, None))
+        elif run.get("decode_pin_dshard"):
+            pin = lambda t: jax.lax.with_sharding_constraint(
+                t, P(run["dp_axes"], None, "model"))
+        else:
+            pin = lambda t: t
+
+        def body(carry, xs):
+            h = pin(carry)
+            lp, k_l, v_l = xs
+            kv = {"k": k_l, "v": v_l, "len": pos, "start": start}
+            h2, new_kv, _ = B.attn_block_apply(
+                lp, cfg, h, moe=cfg.moe is not None, positions=positions,
+                kv_cache=kv, attn_impl="chunked",
+                dp_axes=run["dp_axes"],
+                shard=bool(run.get("decode_moe_shardmap")),
+            )
+            return pin(h2), (new_kv["k"], new_kv["v"])
+
+        if not has_x:
+            x, (nk, nv) = jax.lax.scan(
+                body, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"])
+            )
+            new_cache = {**cache, "kv": {"k": nk, "v": nv}, "len": pos + 1}
+            return x, new_cache
+
+        # VLM decode: group scan, cross-attn once per group (see _attn_stack)
+        every = cfg.xattn_every
+        n_groups = cfg.n_layers // every
+
+        def group_body(carry, xs):
+            h = carry
+            glp, gk, gv, xp, xk, xv = xs
+            h, (nk, nv) = jax.lax.scan(body, h, (glp, gk, gv))
+            h = B.xattn_block_apply(xp, cfg, h, kv_override=(xk, xv))
+            return pin(h), (nk, nv)
+
+        group = lambda a: a.reshape((n_groups, every) + a.shape[1:])
+        x, (nk, nv) = jax.lax.scan(
+            group_body, x,
+            (
+                jax.tree.map(group, params["blocks"]),
+                group(cache["kv"]["k"]), group(cache["kv"]["v"]),
+                params["xattn"], cache["xkv"]["k"], cache["xkv"]["v"],
+            ),
+        )
+        nk = nk.reshape((cfg.n_layers,) + nk.shape[2:])
+        nv = nv.reshape((cfg.n_layers,) + nv.shape[2:])
+        new_cache = {**cache, "kv": {"k": nk, "v": nv}, "len": pos + 1}
+        return x, new_cache
+
+    def _hybrid_decode(self, params, x, cache, run):
+        """Group scan mirroring _hybrid_stack: `every` mamba steps then the
+        shared attention block against its per-occurrence KV cache."""
+        cfg = self.cfg
+        pos = cache["len"]
+        every = cfg.shared_attn_every
+        positions = pos + jnp.arange(x.shape[1])
+        n_groups = cfg.n_layers // every
+        n_head = n_groups * every
+
+        def mamba_body(h, xs):
+            lp, st = xs
+            h2, nst = B.mamba2_block_apply(lp, cfg, h, state=st)
+            return h2, nst
+
+        def group_body(carry, xs):
+            h = carry
+            glp, gst, sk, sv = xs
+            h, nst = jax.lax.scan(mamba_body, h, (glp, gst))
+            kv = {"k": sk, "v": sv, "len": pos, "start": cache.get("start")}
+            h, new_kv, _ = B.attn_block_apply(
+                params["shared_attn"], cfg, h, moe=False,
+                positions=positions, kv_cache=kv, attn_impl="chunked",
+            )
+            return h, (nst, new_kv["k"], new_kv["v"])
+
+        group = lambda a: a[:n_head].reshape((n_groups, every) + a.shape[1:])
+        x, (ns_head, sk, sv) = jax.lax.scan(
+            group_body, x,
+            (
+                jax.tree.map(group, params["blocks"]),
+                jax.tree.map(group, cache["states"]),
+                cache["shared_kv"]["k"], cache["shared_kv"]["v"],
+            ),
+        )
+        ns_head = jax.tree.map(
+            lambda a: a.reshape((n_head,) + a.shape[2:]), ns_head
+        )
+        if n_head == cfg.n_layers:
+            nstates = ns_head
+        else:
+            tail = lambda a: a[n_head:]
+            x, ns_tail = jax.lax.scan(
+                mamba_body, x,
+                (jax.tree.map(tail, params["blocks"]),
+                 jax.tree.map(tail, cache["states"])),
+            )
+            nstates = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), ns_head, ns_tail
+            )
+        new_cache = {
+            **cache,
+            "states": nstates,
+            "shared_kv": {"k": sk, "v": sv},
+            "len": pos + 1,
+        }
+        return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (never materializes full logits)
+# ---------------------------------------------------------------------------
+
+def _xent_chunked(embed_params, cfg: ArchConfig, hidden, targets, mask, *, chunk):
+    B_, S, d = hidden.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+    vp = L.padded_vocab(cfg)
+
+    hid = hidden.reshape(B_, n, chunk, d).transpose(1, 0, 2, 3)
+    if cfg.n_codebooks > 1:
+        tgt = targets.reshape(B_, n, chunk, cfg.n_codebooks).transpose(1, 0, 2, 3)
+    else:
+        tgt = targets.reshape(B_, n, chunk).transpose(1, 0, 2)
+    msk = (
+        mask.reshape(B_, n, chunk).transpose(1, 0, 2).astype(F32)
+        if mask is not None
+        else jnp.ones((n, B_, chunk), F32)
+    )
+
+    pad_penalty = jnp.where(jnp.arange(vp) >= cfg.vocab, -1e30, 0.0)
+
+    def body(acc, xs):
+        h, t, m = xs
+        tot, cnt = acc
+        if cfg.n_codebooks > 1:
+            nll = 0.0
+            for c in range(cfg.n_codebooks):
+                lg = L.logits_apply(embed_params, cfg, h, codebook=c).astype(F32)
+                lg = lg + pad_penalty
+                lse = jax.nn.logsumexp(lg, axis=-1)
+                gold = jnp.take_along_axis(lg, t[..., c][..., None], axis=-1)[..., 0]
+                nll = nll + (lse - gold)
+            nll = nll / cfg.n_codebooks
+        else:
+            lg = L.logits_apply(embed_params, cfg, h).astype(F32)
+            lg = lg + pad_penalty
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, t[..., None], axis=-1)[..., 0]
+            nll = lse - gold
+        return (tot + jnp.sum(nll * m), cnt + jnp.sum(m)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (hid, tgt, msk))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,120 @@
+"""Minimal pure-pytree module system.
+
+One source of truth per layer: a *meta tree* of :class:`ParamMeta` leaves
+(shape, dtype, partition spec, init rule).  From the meta tree we derive
+
+  * materialized parameters (``build_params`` — used by smoke tests/training),
+  * ``jax.ShapeDtypeStruct`` stand-ins (``build_shapes`` — used by dry-runs;
+    no allocation ever happens),
+  * the matching ``PartitionSpec`` tree (``build_pspecs`` — consumed by
+    pjit in/out shardings).
+
+Sharding vocabulary (resolved against the production mesh):
+  * ``"fsdp"``  — parameter/optimizer sharding over the data-parallel axes
+    (("pod","data") on the multi-pod mesh, "data" on one pod) — ZeRO-3.
+  * ``"tp"``    — tensor parallelism over the "model" axis.
+  * ``None``    — replicated.
+Logical names keep layer definitions mesh-agnostic; ``resolve_spec`` maps
+them to concrete mesh axes at lower time.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class ParamMeta(NamedTuple):
+    shape: tuple
+    dtype: Any
+    spec: tuple          # logical names per dim: "fsdp" | "tp" | None
+    init: str            # "normal" | "zeros" | "ones" | "embed"
+    scale: float = 1.0   # multiplier on the init std
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def _leaf_init(key, meta: ParamMeta):
+    if meta.init == "zeros":
+        return jnp.zeros(meta.shape, meta.dtype)
+    if meta.init == "ones":
+        return jnp.ones(meta.shape, meta.dtype)
+    if meta.init == "embed":
+        std = meta.scale
+        return (jax.random.normal(key, meta.shape, jnp.float32) * std).astype(meta.dtype)
+    if meta.init == "normal":
+        fan_in = meta.shape[-2] if len(meta.shape) >= 2 else meta.shape[-1]
+        std = meta.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, meta.shape, jnp.float32) * std).astype(meta.dtype)
+    raise ValueError(meta.init)
+
+
+def build_params(meta_tree, key):
+    """Materialize parameters from a meta tree (pure jax; eval_shape-safe)."""
+    leaves, treedef = jax.tree.flatten(meta_tree, is_leaf=is_meta)
+    keys = jax.random.split(key, len(leaves))
+    params = [_leaf_init(k, m) for k, m in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, params)
+
+
+def build_shapes(meta_tree):
+    """ShapeDtypeStruct stand-ins (for .lower() without allocation)."""
+    return jax.tree.map(
+        lambda m: jax.ShapeDtypeStruct(m.shape, m.dtype), meta_tree, is_leaf=is_meta
+    )
+
+
+def resolve_spec(logical: Sequence, *, multi_pod: bool) -> P:
+    """Map logical dim names to mesh axes."""
+    fsdp = ("pod", "data") if multi_pod else "data"
+    out = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+        elif name == "fsdp":
+            out.append(fsdp)
+        elif name == "tp":
+            out.append("model")
+        elif name == "dp":
+            out.append(("pod", "data") if multi_pod else "data")
+        else:
+            raise ValueError(f"unknown logical axis {name}")
+    return P(*out)
+
+
+def build_pspecs(meta_tree, *, multi_pod: bool):
+    return jax.tree.map(
+        lambda m: resolve_spec(m.spec, multi_pod=multi_pod), meta_tree, is_leaf=is_meta
+    )
+
+
+def stack_meta(meta_tree, n: int):
+    """Prepend a stacked-layer dimension (for lax.scan over layers)."""
+    return jax.tree.map(
+        lambda m: ParamMeta((n,) + tuple(m.shape), m.dtype, (None,) + tuple(m.spec),
+                            m.init, m.scale),
+        meta_tree,
+        is_leaf=is_meta,
+    )
+
+
+def build_params_stacked(meta_tree_single, n: int, key):
+    """Init n stacked copies by vmapping the per-layer init over keys."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: build_params(meta_tree_single, k))(keys)
+
+
+def param_count(meta_tree) -> int:
+    leaves = jax.tree.leaves(meta_tree, is_leaf=is_meta)
+    return sum(int(math.prod(m.shape)) for m in leaves)
+
+
+def param_bytes(meta_tree) -> int:
+    leaves = jax.tree.leaves(meta_tree, is_leaf=is_meta)
+    return sum(int(math.prod(m.shape)) * jnp.dtype(m.dtype).itemsize for m in leaves)

@@ -1,0 +1,4 @@
+from .paged_cache import PagedKVManager
+from .engine import ServingEngine, Request
+
+__all__ = ["PagedKVManager", "ServingEngine", "Request"]

@@ -1,0 +1,211 @@
+"""Continuous-batching serving engine over the wait-free page table.
+
+Production shape (vLLM-style), CPU-runnable at smoke scale:
+
+  * **slot-based continuous batching** — ``max_batch`` cache slots step
+    together every engine tick; per-request asynchrony comes from *forced
+    tokens*: a slot still consuming its prompt feeds the next prompt token
+    (logits ignored), a generating slot feeds its last sampled token.  One
+    ``decode_step`` per tick serves admission, prefill and decode at once —
+    there is no separate prefill graph to compile or schedule.
+  * **slot reuse** — admitting into a previously used slot zeroes that
+    slot's KV rows / recurrent state and sets ``cache["start"][slot]`` so
+    attention never sees the predecessor's rows (layers._decode_attention).
+  * **wait-free page accounting** — every tick builds one op batch
+    (admit/extend/finish) for :class:`PagedKVManager`; the paper's graph is
+    the source of truth for page ownership, and its deterministic phase
+    order is what makes ``failover()`` exact.
+  * **straggler/failover** — ``failover()`` replays the op log into a fresh
+    manager (a replacement host) and verifies page tables match; sampling is
+    seeded per (request, position), so a replacement host regenerates
+    byte-identical tokens too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import LM
+from repro.models.config import ArchConfig
+from repro.serving.paged_cache import PagedKVManager
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray                      # (P,) int32 (or (P, ncb))
+    max_new_tokens: int = 16
+    temperature: float = 0.0                # 0 = greedy
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        max_batch: int = 4,
+        max_len: int = 128,
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.page_size = page_size
+        num_pages = num_pages or (max_batch * max_len) // page_size
+        self.pages = PagedKVManager(num_pages, page_size)
+        self.seed = seed
+
+        self.cache = self.model.decode_init(max_batch, max_len, params=params)
+        self.cache["start"] = jnp.zeros((max_batch,), jnp.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self._consumed: List[int] = [0] * max_batch  # prompt tokens fed
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self.ticks = 0
+        self._step = jax.jit(self._decode_fn())
+
+    def _decode_fn(self):
+        model, cfg = self.model, self.cfg
+
+        def fn(params, tokens, cache):
+            return model.decode_step(params, tokens, cache)
+
+        return fn
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        assert req.prompt.ndim >= 1 and len(req.prompt) >= 1
+        assert len(req.prompt) + req.max_new_tokens <= self.max_len
+        self.queue.append(req)
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, Request]:
+        while (self.queue or any(s is not None for s in self.slots)):
+            self.tick()
+            if self.ticks >= max_ticks:
+                raise RuntimeError("serving did not drain")
+        return self.finished
+
+    # -- one engine tick -----------------------------------------------------
+    def tick(self) -> None:
+        pos = int(self.cache["len"])
+        # timeline compaction: the shared position axis only grows; once every
+        # slot is idle, restart it so long request streams drain on a bounded
+        # cache (the paged manager keeps its own state — page ownership is
+        # per-request, not per-position).
+        if pos > 0 and self.queue and all(s is None for s in self.slots):
+            self.cache = self.model.decode_init(
+                self.max_batch, self.max_len, params=self.params
+            )
+            self.cache["start"] = jnp.zeros((self.max_batch,), jnp.int32)
+            pos = 0
+        admit: Dict[int, int] = {}
+        extend: List[int] = []
+        finish: List[int] = []
+
+        # admission: fill free slots while page budget + timeline room allow
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            need = len(req.prompt) + req.max_new_tokens
+            pages_needed = -(-need // self.page_size)
+            if pos + need > self.max_len or len(self.pages.free) < pages_needed:
+                break  # deterministic: head-of-line blocking, no reorder
+            self.queue.pop(0)
+            self._admit(slot, req, pos)
+            admit[req.id] = len(req.prompt)
+
+        # build this tick's forced/sampled token per active slot
+        tok_shape = (
+            (self.max_batch, 1)
+            if self.cfg.n_codebooks == 1
+            else (self.max_batch, 1, self.cfg.n_codebooks)
+        )
+        tokens = np.zeros(tok_shape, np.int32)
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            c = self._consumed[slot]
+            if c < len(req.prompt):
+                tokens[slot, 0] = req.prompt[c]
+            else:
+                tokens[slot, 0] = req.generated[-1]
+
+        active = [s for s in self.slots if s is not None]
+        if not active and not admit:
+            return
+
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(tokens), self.cache
+        )
+        logits = np.asarray(logits[:, -1], np.float32)
+
+        # fold logits back: sample where the prompt is exhausted
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self._consumed[slot] += 1
+            c = self._consumed[slot]
+            if c >= len(req.prompt):
+                nxt = self._sample(req, logits[slot], position=c)
+                req.generated.append(nxt)
+                if len(req.generated) >= req.max_new_tokens:
+                    req.done = True
+                    finish.append(req.id)
+                    self.finished[req.id] = req
+                    self.slots[slot] = None
+                else:
+                    extend.append(req.id)
+
+        # one deterministic page-table op batch per tick (the paper at work)
+        self.pages.step_ops(admit, extend, finish)
+        self.ticks += 1
+
+    # -- internals -------------------------------------------------------------
+    def _admit(self, slot: int, req: Request, pos: int) -> None:
+        self.slots[slot] = req
+        self._consumed[slot] = 0
+        # zero the slot's stale cache rows + mark admission offset
+        def reset(leaf):
+            if leaf.ndim >= 2 and leaf.shape[1] == self.max_batch:
+                return leaf.at[:, slot].set(0)
+            return leaf
+        for key in ("kv", "shared_kv", "states"):
+            if key in self.cache:
+                self.cache[key] = jax.tree.map(reset, self.cache[key])
+        self.cache["start"] = self.cache["start"].at[slot].set(pos)
+
+    def _sample(self, req: Request, logits_row: np.ndarray, position: int) -> int:
+        if self.cfg.n_codebooks > 1:
+            logits_row = logits_row[0]  # first codebook drives the id stream
+        logits_row = logits_row[: self.cfg.vocab]
+        if req.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, req.id, position])
+        )
+        z = logits_row / req.temperature
+        z = z - z.max()
+        p = np.exp(z) / np.exp(z).sum()
+        return int(rng.choice(len(p), p=p))
+
+    # -- fault tolerance ---------------------------------------------------------
+    def failover(self) -> PagedKVManager:
+        """Replacement-host path: rebuild page tables from the op log and
+        verify the twin matches (deterministic phase order ⇒ exact)."""
+        twin = self.pages.replay()
+        assert twin.seq_pages == self.pages.seq_pages, "failover mismatch"
+        assert sorted(twin.free) == sorted(self.pages.free)
+        return twin

@@ -1,0 +1,86 @@
+"""Int8 error-feedback gradient compression: numerics + real collectives."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.compress import (
+    compression_ratio, dequantize, ef_init, quantize,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    err = np.asarray(dequantize(quantize(x, scale), scale) - x)
+    assert np.abs(err).max() <= float(scale) / 2 + 1e-7
+
+
+def test_compression_ratio_near_4x():
+    tree = {"a": jnp.zeros((1024, 1024)), "b": jnp.zeros((4096,))}
+    r = compression_ratio(tree)
+    assert 3.9 < r < 4.0
+
+
+_COLLECTIVE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro.optim.compress import compressed_psum, ef_init
+
+    mesh = jax.make_mesh((4,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Explicit,))
+    rng = np.random.default_rng(1)
+    # per-pod gradients (4, n): the true mean is the uncompressed target
+    g = rng.standard_normal((4, 256)).astype(np.float32)
+    target = g.mean(axis=0)
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
+             out_specs=(P("pod"), P("pod")))
+    def step(gi, ei):
+        out, new_e = compressed_psum(
+            {"w": gi[0]}, {"w": ei[0]}, axis="pod"
+        )
+        return out["w"][None], new_e["w"][None]
+
+    with jax.set_mesh(mesh):
+        e = jnp.zeros((4, 256), jnp.float32)
+        out, e = step(jnp.asarray(g), e)
+    out = np.asarray(out)
+    # every pod got the identical compressed mean (determinism)
+    assert np.all(out[0] == out[1]) and np.all(out[0] == out[3])
+    # one-round quantization error is bounded by the scale
+    scale = np.abs(g + 0).max() / 127.0
+    assert np.abs(out[0] - target).max() < scale, (out[0] - target)
+
+    # error feedback: averaging the SAME grads repeatedly converges to the
+    # true mean (residuals re-enter), unlike plain repeated quantization
+    with jax.set_mesh(mesh):
+        e = jnp.zeros((4, 256), jnp.float32)
+        acc = np.zeros(256, np.float32)
+        T = 64
+        for _ in range(T):
+            out, e = step(jnp.asarray(g), e)
+            acc += np.asarray(out)[0]
+    assert np.abs(acc / T - target).max() < 1e-3
+    print("COMPRESS_OK")
+""")
+
+
+def test_compressed_psum_multidevice():
+    r = subprocess.run(
+        [sys.executable, "-c", _COLLECTIVE_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+    )
+    assert "COMPRESS_OK" in r.stdout, (r.stderr[-2000:] or r.stdout[-500:])

@@ -1,0 +1,64 @@
+"""Spec conformance: every assigned architecture carries the exact
+public-literature configuration from the assignment table."""
+
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, cell_is_runnable, get_config
+
+# (layers, d_model, heads, kv_heads, d_ff, vocab) straight from the brief
+SPEC = {
+    "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+    "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+    "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    "rwkv6-3b": (32, 2560, 0, 0, 8960, 65536),
+    "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_exact_config(name):
+    cfg = get_config(name)
+    L, d, h, kv, ff, v = SPEC[name]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab == v
+
+
+def test_family_features():
+    assert get_config("granite-moe-3b-a800m").moe.top_k == 8
+    assert get_config("mixtral-8x7b").moe.n_experts == 8
+    assert get_config("mixtral-8x7b").moe.top_k == 2
+    assert get_config("mixtral-8x7b").window is not None          # SWA
+    assert get_config("h2o-danube-3-4b").window is not None       # SWA
+    assert get_config("qwen2-7b").qkv_bias                        # QKV bias
+    assert get_config("zamba2-1.2b").ssm.state == 64              # ssm_state
+    assert get_config("zamba2-1.2b").shared_attn_every
+    assert get_config("llama-3.2-vision-11b").xattn_every
+    assert get_config("musicgen-medium").n_codebooks > 1
+    assert get_config("rwkv6-3b").family == "ssm"
+
+
+def test_long_500k_skip_policy():
+    """long_500k runs iff sub-quadratic (SWA / SSM / hybrid)."""
+    runnable = {
+        name for name in ARCH_NAMES
+        if cell_is_runnable(get_config(name), "long_500k")
+    }
+    assert runnable == {
+        "h2o-danube-3-4b", "mixtral-8x7b", "rwkv6-3b", "zamba2-1.2b"
+    }
+    for name in ARCH_NAMES:  # every other shape always runs
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_is_runnable(get_config(name), shape)
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"] == dict(seq_len=4096, global_batch=256, kind="train")
+    assert SHAPES["prefill_32k"] == dict(seq_len=32768, global_batch=32, kind="prefill")
+    assert SHAPES["decode_32k"] == dict(seq_len=32768, global_batch=128, kind="decode")
+    assert SHAPES["long_500k"] == dict(seq_len=524288, global_batch=1, kind="decode")

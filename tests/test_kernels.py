@@ -1,0 +1,190 @@
+"""Per-kernel sweeps: shapes × dtypes, interpret-mode vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention, mha_chunked, mha_reference
+from repro.kernels.hash_probe import hash_probe, hash_probe_reference
+from repro.kernels.paged_attention import paged_attention, paged_attention_reference
+from repro.kernels.ssd_scan import (
+    linear_scan_chunked,
+    linear_scan_reference,
+    linear_scan_step,
+    ssd_scan,
+)
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+RTOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Sq,Sk,D,causal,window",
+    [
+        (1, 2, 2, 32, 32, 16, True, None),     # MHA causal
+        (2, 4, 2, 64, 64, 32, True, None),     # GQA
+        (1, 8, 1, 32, 32, 64, True, None),     # MQA
+        (2, 4, 2, 64, 64, 32, True, 16),       # sliding window
+        (1, 2, 2, 16, 48, 32, False, None),    # cross (Sq != Sk, no causal)
+        (1, 2, 2, 32, 40, 16, True, None),     # non-multiple Sk (padding)
+    ],
+)
+def test_flash_attention_sweep(B, Hq, Hkv, Sq, Sk, D, causal, window, dtype):
+    rng = np.random.default_rng(hash((B, Hq, Sq, Sk, D, causal, str(window))) % 2**32)
+    q = _rand(rng, (B, Hq, Sq, D), dtype)
+    k = _rand(rng, (B, Hkv, Sk, D), dtype)
+    v = _rand(rng, (B, Hkv, Sk, D), dtype)
+    ref = mha_reference(q, k, v, causal=causal, window=window)
+    got = attention(
+        q, k, v, causal=causal, window=window,
+        impl="kernel_interpret", block_q=16, block_k=16,
+    )
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), ref.astype(jnp.float32),
+        atol=ATOL[dtype], rtol=RTOL[dtype],
+    )
+
+
+def test_chunked_matches_reference_large_window():
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (1, 4, 128, 32), jnp.float32)
+    k = _rand(rng, (1, 2, 128, 32), jnp.float32)
+    v = _rand(rng, (1, 2, 128, 32), jnp.float32)
+    for window in (None, 32, 100):
+        ref = mha_reference(q, k, v, causal=True, window=window)
+        got = mha_chunked(q, k, v, causal=True, window=window, block_k=32)
+        np.testing.assert_allclose(got, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_decode_offset():
+    """Decode: Sq=1 positioned at the cache tail via q_offset."""
+    rng = np.random.default_rng(1)
+    k = _rand(rng, (2, 2, 64, 16), jnp.float32)
+    v = _rand(rng, (2, 2, 64, 16), jnp.float32)
+    qfull = _rand(rng, (2, 2, 64, 16), jnp.float32)
+    ref = mha_reference(qfull, k, v, causal=True)
+    got = mha_chunked(qfull[:, :, -1:], k, v, causal=True, q_offset=63, block_k=16)
+    np.testing.assert_allclose(got[:, :, 0], ref[:, :, -1], atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,D,P,page,ppseq",
+    [
+        (2, 4, 4, 16, 8, 8, 2),     # MHA
+        (3, 8, 2, 32, 16, 8, 4),    # GQA
+        (1, 12, 1, 64, 8, 16, 3),   # MQA, larger pages
+    ],
+)
+def test_paged_attention_sweep(B, Hq, Hkv, D, P, page, ppseq, dtype):
+    rng = np.random.default_rng(hash((B, Hq, Hkv, D, P, page, ppseq)) % 2**32)
+    q = _rand(rng, (B, Hq, D), dtype)
+    kp = _rand(rng, (P, page, Hkv, D), dtype)
+    vp = _rand(rng, (P, page, Hkv, D), dtype)
+    bt = jnp.asarray(
+        rng.choice(P, size=(B, ppseq), replace=False if B * ppseq <= P else True)
+        .astype(np.int32)
+    )
+    sl = jnp.asarray(rng.integers(1, page * ppseq + 1, size=(B,)).astype(np.int32))
+    ref = paged_attention_reference(q, kp, vp, bt, sl)
+    got = paged_attention(q, kp, vp, bt, sl, impl="kernel_interpret")
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), ref.astype(jnp.float32),
+        atol=ATOL[dtype], rtol=RTOL[dtype],
+    )
+
+
+# ---------------------------------------------------------------------------
+# ssd / gated linear attention scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,S,K,V,chunk,scalar",
+    [
+        (1, 2, 64, 8, 8, 16, False),
+        (2, 3, 128, 16, 24, 32, False),
+        (2, 2, 128, 32, 32, 64, True),     # Mamba-2 scalar-decay MXU path
+        (1, 1, 256, 64, 64, 64, False),    # RWKV-ish head dims
+    ],
+)
+def test_ssd_scan_sweep(B, H, S, K, V, chunk, scalar, dtype):
+    rng = np.random.default_rng(hash((B, H, S, K, V, chunk, scalar)) % 2**32)
+    q = _rand(rng, (B, H, S, K), dtype) * 0.5
+    k = _rand(rng, (B, H, S, K), dtype) * 0.5
+    v = _rand(rng, (B, H, S, V), dtype) * 0.5
+    if scalar:
+        w = jnp.broadcast_to(
+            jnp.asarray(rng.uniform(0.05, 1.0, (B, H, S, 1)), jnp.float32), (B, H, S, K)
+        ).astype(dtype)
+    else:
+        w = jnp.asarray(rng.uniform(0.01, 1.0, (B, H, S, K)), jnp.float32).astype(dtype)
+    ref, _ = linear_scan_reference(q, k, v, w)
+    got = ssd_scan(q, k, v, w, chunk=chunk, scalar_decay=scalar, impl="kernel_interpret")
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), ref.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+def test_ssd_chunked_final_state_feeds_decode():
+    """Train-to-serve continuity: chunked final state == reference, and the
+    O(1) decode step continues it exactly."""
+    rng = np.random.default_rng(5)
+    B, H, S, K, V = 1, 2, 64, 8, 8
+    q = _rand(rng, (B, H, S + 1, K), jnp.float32)
+    k = _rand(rng, (B, H, S + 1, K), jnp.float32)
+    v = _rand(rng, (B, H, S + 1, V), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, (B, H, S + 1, K)), jnp.float32)
+
+    full, _ = linear_scan_reference(q, k, v, w)
+    _, h = linear_scan_chunked(q[:, :, :S], k[:, :, :S], v[:, :, :S], w[:, :, :S], chunk=16)
+    y, _ = linear_scan_step(q[:, :, S], k[:, :, S], v[:, :, S], w[:, :, S], h)
+    np.testing.assert_allclose(y, full[:, :, S], atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# hash probe
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cap,n", [(64, 16), (256, 64), (1024, 256)])
+def test_hash_probe_sweep(cap, n):
+    rng = np.random.default_rng(cap * 31 + n)
+    # build a table via the engine's own claim path for realism
+    from repro.core.locate import claim_vertex_slots
+    from repro.core.types import EMPTY_KEY
+
+    table = jnp.full((cap,), EMPTY_KEY, jnp.int32)
+    present = jnp.asarray(
+        rng.choice(10_000, size=cap // 4, replace=False).astype(np.int32)
+    )
+    table, _, over = claim_vertex_slots(table, present, jnp.ones((cap // 4,), bool))
+    assert not bool(over)
+
+    # queries: half present, half absent
+    absent = jnp.asarray((10_000 + rng.integers(0, 1000, n // 2)).astype(np.int32))
+    queries = jnp.concatenate([present[: n - n // 2], absent])
+
+    f_ref, e_ref = hash_probe_reference(table, queries)
+    f_ker, e_ker = hash_probe(table, queries, impl="kernel_interpret")
+    np.testing.assert_array_equal(f_ker, f_ref)
+    np.testing.assert_array_equal(e_ker, e_ref)
+    # semantic check: every present query found, every absent one got an
+    # insert candidate
+    f = np.asarray(f_ref)
+    assert (f[: n - n // 2] >= 0).all()
+    assert (f[n - n // 2:] == -1).all()
+    assert (np.asarray(e_ref)[n - n // 2:] >= 0).all()

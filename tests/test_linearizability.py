@@ -1,0 +1,94 @@
+"""Property-based linearizability tests (hypothesis).
+
+The central invariant of the paper: every concurrent execution is equivalent
+to *some* sequential one.  Our engine is stronger — it guarantees equivalence
+to the *phase-ordered* sequential execution — so the property is exact
+equality of every op result (and of the final abstract graph) against the
+sequential oracle, for arbitrary op sequences.
+"""
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import make_batch, make_state, run_sequential
+from repro.core import baselines, engine, fastpath
+from repro.core.oracle import SequentialGraph
+from repro.core.types import (
+    OP_ADD_EDGE,
+    OP_ADD_VERTEX,
+    OP_CONTAINS_EDGE,
+    OP_CONTAINS_VERTEX,
+    OP_REMOVE_EDGE,
+    OP_REMOVE_VERTEX,
+)
+
+# small key space forces dense conflicts — the hard case for helping logic
+ops_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(
+            [OP_ADD_VERTEX, OP_REMOVE_VERTEX, OP_CONTAINS_VERTEX,
+             OP_ADD_EDGE, OP_REMOVE_EDGE, OP_CONTAINS_EDGE]
+        ),
+        st.integers(min_value=0, max_value=5),
+        st.integers(min_value=0, max_value=5),
+    ),
+    min_size=1,
+    max_size=48,
+)
+
+COMMON = dict(
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def _run(fn, seq):
+    o = np.array([s[0] for s in seq], np.int32)
+    u = np.array([s[1] for s in seq], np.int32)
+    v = np.array([s[2] for s in seq], np.int32)
+    res = fn(make_state(128, 256), make_batch(o, u, v))
+    assert bool(res.ok)
+    exp, oracle = run_sequential(o, u, v)
+    assert np.asarray(res.success).tolist() == exp
+    return res.state, oracle
+
+
+@settings(max_examples=60, **COMMON)
+@given(ops_strategy)
+def test_waitfree_linearizable(seq):
+    _run(engine.apply_batch, seq)
+
+
+@settings(max_examples=40, **COMMON)
+@given(ops_strategy)
+def test_fpsp_linearizable(seq):
+    _run(fastpath.apply_batch_fpsp, seq)
+
+
+@settings(max_examples=25, **COMMON)
+@given(ops_strategy)
+def test_lockfree_linearizable(seq):
+    _run(baselines.apply_lockfree, seq)
+
+
+@settings(max_examples=30, **COMMON)
+@given(ops_strategy, ops_strategy)
+def test_cross_batch_state_carries(seq1, seq2):
+    """Two consecutive batches = one long sequential history."""
+    o1 = np.array([s[0] for s in seq1], np.int32)
+    u1 = np.array([s[1] for s in seq1], np.int32)
+    v1 = np.array([s[2] for s in seq1], np.int32)
+    o2 = np.array([s[0] for s in seq2], np.int32)
+    u2 = np.array([s[1] for s in seq2], np.int32)
+    v2 = np.array([s[2] for s in seq2], np.int32)
+
+    st1 = make_state(128, 256)
+    r1 = engine.apply_batch(st1, make_batch(o1, u1, v1))
+    r2 = engine.apply_batch(r1.state, make_batch(o2, u2, v2, phase_base=len(o1)))
+
+    oracle = SequentialGraph()
+    e1, oracle = run_sequential(o1, u1, v1, graph=oracle)
+    e2, oracle = run_sequential(o2, u2, v2, graph=oracle)
+    assert np.asarray(r1.success).tolist() == e1
+    assert np.asarray(r2.success).tolist() == e2

@@ -1,0 +1,80 @@
+"""AdamW + schedule + clipping semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adamw import cosine_schedule, opt_pspecs
+
+
+def _cfg(**kw):
+    base = dict(lr=0.1, warmup_steps=2, total_steps=10_000, weight_decay=0.0,
+                clip_norm=1e9, grad_dtype=None)
+    base.update(kw)
+    return AdamWConfig(**base)
+
+
+def test_quadratic_converges():
+    cfg = _cfg()
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(300):
+        grads = {"w": 2.0 * params["w"]}   # d/dw of w^2
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_weight_decay_pulls_to_zero():
+    cfg = _cfg(weight_decay=0.5)
+    params = {"w": jnp.asarray([1.0])}
+    state = adamw_init(params)
+    for _ in range(50):
+        params, state, _ = adamw_update(cfg, params, {"w": jnp.zeros(1)}, state)
+    assert float(params["w"][0]) < 0.9  # decays even with zero gradient
+
+
+def test_clip_norm_caps_update():
+    cfg = _cfg(clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    _, _, m1 = adamw_update(cfg, params, {"w": jnp.full(4, 1e6)}, state)
+    assert float(m1["grad_norm"]) > 1e5  # reported pre-clip norm
+
+
+def test_master_weights_survive_bf16_params():
+    """bf16 params accumulate tiny updates through the f32 master copy."""
+    cfg = _cfg(lr=1e-4)
+    params = {"w": jnp.ones(1, jnp.bfloat16)}
+    state = adamw_init(params)
+    for _ in range(10):
+        params, state, _ = adamw_update(
+            cfg, params, {"w": jnp.ones(1, jnp.float32)}, state
+        )
+    # master moved even if bf16 rounding would have eaten single steps
+    assert float(state["master"]["w"][0]) < 1.0
+    assert params["w"].dtype == jnp.bfloat16
+
+
+def test_master_does_not_alias_params():
+    params = {"w": jnp.ones(4, jnp.float32)}
+    state = adamw_init(params)
+    # donation-safety: distinct buffers (regression: f32 astype aliased)
+    assert state["master"]["w"].unsafe_buffer_pointer() != params["w"].unsafe_buffer_pointer()
+
+
+def test_schedule_warmup_and_decay():
+    cfg = _cfg(lr=1.0, warmup_steps=10, total_steps=110)
+    lr0 = float(cosine_schedule(cfg, jnp.int32(1)))
+    lr_w = float(cosine_schedule(cfg, jnp.int32(10)))
+    lr_end = float(cosine_schedule(cfg, jnp.int32(110)))
+    assert lr0 < 0.2 and abs(lr_w - 1.0) < 1e-6 and lr_end < 1e-3
+
+
+def test_opt_pspecs_mirror_params():
+    from jax.sharding import PartitionSpec as P
+
+    pspecs = {"a": P("data", None), "b": {"c": P(None, "model")}}
+    out = opt_pspecs(pspecs)
+    assert out["m"] == pspecs and out["v"] == pspecs and out["master"] == pspecs
+    assert out["count"] == P()
