@@ -1,0 +1,136 @@
+"""Batched reachability benchmark: query-batch size × graph size × engine.
+
+The workload family of the related papers (arXiv 1809.00896 reachability
+queries, arXiv 2310.02380 wait-free snapshots) on top of this repo's graph:
+build a graph with the ``traversal`` mix, compact it once into a consistent
+CSR snapshot, then answer batches of ``reachable(u, v)`` pairs.
+
+Engines:
+
+  oracle   — pure-Python sequential BFS per query (the ground truth's cost)
+  batched  — the jitted CSR frontier engine, whole query batch per dispatch
+
+Two costs are reported separately: ``snap_ms`` (one-time CSR compaction per
+graph version — amortized over every query until the next update batch) and
+``us_per_query`` (marginal per-query cost at the given batch size).
+
+CPU caveat (same as graph_throughput.py): the frontier expansion is one
+gather + one scatter-max per level, and XLA lowers the scatter near-serially
+on CPU, so absolute ``us_per_query`` compresses the batched engine's numbers;
+the machine-independent content is the *scaling* in batch size (the whole
+query batch rides one dispatch) and the one-dispatch snapshot cost.
+
+Usage:  python benchmarks/graph_reachability.py [--quick]
+Output: CSV rows on stdout (bench,engine,build,graph_size,batch,...).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core import WaitFreeGraph, traversal
+from repro.core.workloads import initial_vertices, sample_batch, sample_query_pairs
+
+GRAPH_SIZES = (256, 1024, 4096)
+QUERY_BATCHES = (1, 16, 128, 1024)
+ORACLE_MAX_BATCH = 128  # python BFS per query; cap its sweep and say so
+
+
+def _build_graph(key_space: int, mode: str, seed: int = 0) -> WaitFreeGraph:
+    """Pre-seeded vertices (the paper's initial graph) + traversal-mix
+    traffic, so AddE lands on live endpoints and real path structure forms."""
+    rng = np.random.default_rng(seed)
+    g = WaitFreeGraph(v_capacity=4 * key_space, e_capacity=16 * key_space, mode=mode)
+    g.apply(*initial_vertices(key_space))
+    for _ in range(4):
+        ops, us, vs = sample_batch(rng, key_space // 2, "traversal", key_space=key_space)
+        g.apply(ops, us, vs)
+    return g
+
+
+def _bench_batched(g: WaitFreeGraph, pairs, timed: int):
+    jax.block_until_ready(traversal.build_csr(g.state))  # warmup / compile
+    t0 = time.perf_counter()
+    csr = traversal.build_csr(g.state)
+    jax.block_until_ready(csr)
+    dt_snap = time.perf_counter() - t0
+    us, vs = pairs
+    r = traversal.reachable(csr, us, vs)  # warmup / compile
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(timed):
+        r = traversal.reachable(csr, us, vs)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / timed, dt_snap, np.asarray(r)
+
+
+def _bench_oracle(g: WaitFreeGraph, pairs, timed: int):
+    from repro.core.oracle import SequentialGraph
+
+    t0 = time.perf_counter()
+    V, E = g.snapshot()
+    o = SequentialGraph()
+    o.vertices, o.edges = V, E
+    dt_snap = time.perf_counter() - t0
+    us, vs = pairs
+    t0 = time.perf_counter()
+    for _ in range(timed):
+        out = [o.reachable(int(a), int(b)) for a, b in zip(us, vs)]
+    dt = (time.perf_counter() - t0) / timed
+    return dt, dt_snap, np.asarray(out)
+
+
+def run(
+    graph_sizes=GRAPH_SIZES,
+    batches=QUERY_BATCHES,
+    build_modes=("waitfree", "fpsp"),
+    timed: int = 8,
+    seed: int = 0,
+) -> List[Dict]:
+    rows = []
+    for key_space in graph_sizes:
+        for mode in build_modes:
+            g = _build_graph(key_space, mode, seed)
+            rng = np.random.default_rng(seed + 1)
+            for n in batches:
+                pairs = sample_query_pairs(rng, n, key_space)
+                dt_b, snap_b, out_b = _bench_batched(g, pairs, timed)
+                rows.append(dict(engine="batched", build=mode, graph_size=key_space,
+                                 batch=n, snap_ms=1e3 * snap_b,
+                                 us_per_query=1e6 * dt_b / n))
+                if n > ORACLE_MAX_BATCH:
+                    # stderr: stdout is the documented CSV contract
+                    print(f"# dropped: oracle @ batch {n} (python BFS per query; "
+                          f"capped at {ORACLE_MAX_BATCH})", file=sys.stderr)
+                    continue
+                dt_o, snap_o, out_o = _bench_oracle(g, pairs, max(1, timed // 4))
+                assert out_b.tolist() == out_o.tolist(), "engines disagree"
+                rows.append(dict(engine="oracle", build=mode, graph_size=key_space,
+                                 batch=n, snap_ms=1e3 * snap_o,
+                                 us_per_query=1e6 * dt_o / n))
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(
+        graph_sizes=(256, 1024) if quick else GRAPH_SIZES,
+        batches=(16, 128) if quick else QUERY_BATCHES,
+        build_modes=("waitfree",) if quick else ("waitfree", "fpsp"),
+        timed=2 if quick else 8,
+    )
+    print("bench,engine,build,graph_size,batch,snap_ms,us_per_query")
+    for r in rows:
+        print(
+            f"graph_reachability,{r['engine']},{r['build']},{r['graph_size']},"
+            f"{r['batch']},{r['snap_ms']:.3f},{r['us_per_query']:.2f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv[1:])

@@ -7,10 +7,13 @@ Public API:
   * :func:`repro.core.fastpath.apply_batch_fpsp` — fast-path-slow-path.
   * :mod:`repro.core.baselines` — coarse / serial / lock-free comparisons.
   * :mod:`repro.core.oracle` — sequential specification (ground truth).
+  * :mod:`repro.core.traversal` — batched wait-free reachability/BFS/k-hop
+    over compacted consistent snapshots (CSR), linearized at batch boundaries.
 """
 
 from .graph import WaitFreeGraph
 from .oracle import SequentialGraph, run_sequential
+from .traversal import TraversalCSR, bfs_levels, build_csr, khop_mask, reachable
 from .types import (
     OP_ADD_EDGE,
     OP_ADD_VERTEX,
@@ -30,6 +33,11 @@ __all__ = [
     "WaitFreeGraph",
     "SequentialGraph",
     "run_sequential",
+    "TraversalCSR",
+    "build_csr",
+    "bfs_levels",
+    "reachable",
+    "khop_mask",
     "GraphState",
     "OpBatch",
     "ApplyResult",

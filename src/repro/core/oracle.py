@@ -15,7 +15,8 @@ Semantics follow the paper's §2.1 on the *abstract* graph G=(V, E):
 
 from __future__ import annotations
 
-from typing import Iterable, List, Sequence, Set, Tuple
+from collections import deque
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
 
 from .types import (
     OP_ADD_EDGE,
@@ -72,6 +73,35 @@ class SequentialGraph:
         if u not in self.vertices or v not in self.vertices:
             return False
         return (u, v) in self.edges
+
+    # -- traversal queries (sequential specification) --------------------
+    def bfs(self, u: int) -> Dict[int, int]:
+        """BFS level map {vertex: hop distance} from u (u itself at 0).
+        Empty when u is absent — matching the engine's dead-source rows."""
+        if u not in self.vertices:
+            return {}
+        adj: Dict[int, List[int]] = {}
+        for a, b in self.edges:
+            adj.setdefault(a, []).append(b)
+        levels = {u: 0}
+        q = deque([u])
+        while q:
+            a = q.popleft()
+            for b in adj.get(a, ()):
+                if b not in levels:
+                    levels[b] = levels[a] + 1
+                    q.append(b)
+        return levels
+
+    def reachable(self, u: int, v: int) -> bool:
+        """Directed u ↝ v; u ↝ u is True iff u exists (the empty path)."""
+        if u not in self.vertices or v not in self.vertices:
+            return False
+        return v in self.bfs(u)
+
+    def khop(self, u: int, k: int) -> Set[int]:
+        """Vertices within ≤k directed hops of u (including u)."""
+        return {w for w, d in self.bfs(u).items() if d <= k}
 
     def apply(self, op: int, u: int, v: int) -> bool:
         if op == OP_ADD_VERTEX:

@@ -1,0 +1,203 @@
+"""Batched wait-free reachability + snapshot traversal engine.
+
+The paper's graph answers the six membership operations; its lineage —
+Chatterjee et al. (arXiv 1809.00896, non-blocking graph with reachability
+queries) and Bhardwaj et al. (arXiv 2310.02380, wait-free snapshots) — shows
+that *traversal* queries over a consistent snapshot are what real workloads
+run on top.  This module is the dataflow analogue of their wait-free
+``GetPath``/snapshot:
+
+1. **Snapshot compaction** (:func:`build_csr`) — one jitted pass compacts the
+   live, incarnation-valid edge set of a :class:`GraphState` into CSR form.
+   Vertex identity is the *table slot* (stable within a state), so no key
+   remapping is needed: edges resolve their endpoint slots via the same
+   bounded-probe :func:`~repro.core.locate.locate_vertices` the engines use,
+   stale bindings (incarnation mismatch — the Fig. 3 hazard) are masked out,
+   survivors are sorted by source slot, and row offsets fall out of two
+   ``searchsorted`` calls.  The CSR is a pure value: queries against it are
+   trivially linearizable at the batch boundary of the state it was built
+   from — every query in a batch observes the *same* post-batch graph.
+
+2. **Batched frontier BFS** (:func:`bfs_levels`) — a jitted
+   ``lax.while_loop`` expands all S source frontiers simultaneously:
+   one gather (edge source slots vs. frontier) + one scatter-max (edge
+   destination slots) per level.  The iteration count is bounded by the live
+   vertex count (no path is longer), so the loop is bounded-depth — the
+   traversal analogue of the engines' wait-free locate bound.
+
+3. **Query forms** — :func:`reachable` (pairwise u↝v for a whole batch),
+   :func:`bfs_levels` (full level maps), :func:`khop_mask` (bounded-depth
+   neighborhoods).  All are exact against :class:`repro.core.oracle`
+   (see ``tests/test_traversal.py``).
+
+Host-side convenience wrappers (key-space in/out, batch bucketing) live on
+:class:`repro.core.graph.WaitFreeGraph`.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .locate import locate_vertices
+from .types import EMPTY_KEY, GraphState
+
+_NO_LEVEL = jnp.int32(-1)
+
+
+class TraversalCSR(NamedTuple):
+    """A compacted, consistent snapshot of one :class:`GraphState`.
+
+    Vertices are identified by their slot in the originating vertex table
+    (``0 .. Cv-1``); ``Cv`` itself is the sentinel slot for "no vertex".
+    Edge arrays are sorted by ``src`` with invalid lanes pushed to the end
+    (``src == dst == Cv``), so ``row_start/row_end`` delimit each slot's
+    out-neighbor run.
+    """
+
+    v_key: jnp.ndarray      # i32[Cv] — table keys (EMPTY_KEY where unused)
+    v_live: jnp.ndarray     # bool[Cv]
+    n_live: jnp.ndarray     # i32[] — live vertex count (BFS depth bound)
+    src: jnp.ndarray        # i32[Ce] — source slot per edge lane, sorted; Cv = invalid
+    dst: jnp.ndarray        # i32[Ce] — destination slot, aligned with src
+    row_start: jnp.ndarray  # i32[Cv] — CSR offsets into src/dst
+    row_end: jnp.ndarray    # i32[Cv]
+    n_edges: jnp.ndarray    # i32[] — valid edge count
+
+    @property
+    def v_capacity(self) -> int:
+        return self.v_key.shape[0]
+
+
+def _edge_validity(state: GraphState):
+    """Per-edge-lane validity — the Fig. 3 hazard mask shared by the CSR
+    build and the snapshot: an edge lane is valid iff it is live, both
+    endpoint keys locate to table slots, both endpoints are live, and both
+    stored incarnations equal the endpoints' current incarnations (stale
+    bindings from removed-and-re-added vertices are exactly the lanes this
+    masks out).  Returns (src_slot, dst_slot, valid)."""
+    has_edge = state.e_key_u != EMPTY_KEY
+    loc_u = locate_vertices(state.v_key, state.e_key_u, has_edge & state.e_live)
+    loc_v = locate_vertices(state.v_key, state.e_key_v, has_edge & state.e_live)
+    su = jnp.where(loc_u.found, loc_u.slot, 0)
+    sv = jnp.where(loc_v.found, loc_v.slot, 0)
+    valid = (
+        state.e_live
+        & loc_u.found
+        & loc_v.found
+        & state.v_live[su]
+        & state.v_live[sv]
+        & (state.v_inc[su] == state.e_inc_u)
+        & (state.v_inc[sv] == state.e_inc_v)
+    )
+    return su, sv, valid
+
+
+@jax.jit
+def build_csr(state: GraphState) -> TraversalCSR:
+    """Compact the live, incarnation-valid edge set into CSR form
+    (validity per :func:`_edge_validity`)."""
+    cv = state.v_key.shape[0]
+    su, sv, valid = _edge_validity(state)
+
+    src = jnp.where(valid, su, cv).astype(jnp.int32)
+    dst = jnp.where(valid, sv, cv).astype(jnp.int32)
+    order = jnp.argsort(src, stable=True)
+    src = src[order]
+    dst = dst[order]
+
+    rows = jnp.arange(cv, dtype=jnp.int32)
+    row_start = jnp.searchsorted(src, rows, side="left").astype(jnp.int32)
+    row_end = jnp.searchsorted(src, rows, side="right").astype(jnp.int32)
+
+    return TraversalCSR(
+        v_key=state.v_key,
+        v_live=state.v_live,
+        n_live=jnp.sum(state.v_live).astype(jnp.int32),
+        src=src,
+        dst=dst,
+        row_start=row_start,
+        row_end=row_end,
+        n_edges=jnp.sum(valid).astype(jnp.int32),
+    )
+
+
+def _locate_live_slots(csr: TraversalCSR, keys: jnp.ndarray):
+    """Map query keys to live slots; returns (slot, is_live) with slot=Cv when
+    absent/dead.  EMPTY_KEY query lanes (batch padding) resolve to dead."""
+    active = keys != EMPTY_KEY
+    loc = locate_vertices(csr.v_key, keys, active)
+    safe = jnp.where(loc.found, loc.slot, 0)
+    live = loc.found & csr.v_live[safe]
+    slot = jnp.where(live, loc.slot, csr.v_capacity).astype(jnp.int32)
+    return slot, live
+
+
+@jax.jit
+def bfs_levels(csr: TraversalCSR, src_keys: jnp.ndarray) -> jnp.ndarray:
+    """Batched BFS level map: i32[S, Cv], -1 = unreachable.
+
+    ``levels[s, j]`` is the hop distance from ``src_keys[s]`` to the vertex
+    in slot ``j`` (0 for the source itself).  Sources that are absent, dead,
+    or EMPTY_KEY padding yield all -1 rows.  One frontier expansion per loop
+    iteration: gather edge sources against the frontier, scatter-max into
+    edge destinations; the loop is capped at the live-vertex count.
+    """
+    cv = csr.v_capacity
+    n_src = src_keys.shape[0]
+    slot, live = _locate_live_slots(csr, src_keys)
+
+    # one extra column absorbs sentinel slot Cv (invalid edges / dead sources)
+    frontier = jnp.zeros((n_src, cv + 1), bool)
+    frontier = frontier.at[jnp.arange(n_src), slot].set(live)
+    levels = jnp.full((n_src, cv + 1), _NO_LEVEL)
+    levels = jnp.where(frontier, 0, levels)
+
+    def cond(carry):
+        _, frontier, depth = carry
+        return jnp.any(frontier[:, :cv]) & (depth < csr.n_live)
+
+    def body(carry):
+        levels, frontier, depth = carry
+        on_edge = frontier[:, csr.src]                       # bool[S, Ce]
+        hit = jnp.zeros((n_src, cv + 1), bool).at[:, csr.dst].max(on_edge)
+        new = hit & (levels == _NO_LEVEL)
+        new = new.at[:, cv].set(False)
+        levels = jnp.where(new, depth + 1, levels)
+        return levels, new, depth + 1
+
+    levels, _, _ = jax.lax.while_loop(cond, body, (levels, frontier, jnp.int32(0)))
+    return levels[:, :cv]
+
+
+@jax.jit
+def reachable(csr: TraversalCSR, us: jnp.ndarray, vs: jnp.ndarray) -> jnp.ndarray:
+    """Batched reachability: bool[B], ``us[i] ↝ vs[i]`` by directed paths.
+
+    False when either endpoint is absent/dead; ``u ↝ u`` is True iff u is
+    live (the empty path).  Every pair is answered against the same snapshot.
+    """
+    levels = bfs_levels(csr, us)
+    dslot, dlive = _locate_live_slots(csr, vs)
+    safe = jnp.where(dlive, dslot, 0)
+    return dlive & (levels[jnp.arange(us.shape[0]), safe] >= 0)
+
+
+@jax.jit
+def khop_mask(csr: TraversalCSR, src_keys: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """bool[S, Cv]: slots within ≤k directed hops of each source (incl. self)."""
+    levels = bfs_levels(csr, src_keys)
+    return (levels >= 0) & (levels <= jnp.asarray(k, jnp.int32))
+
+
+@jax.jit
+def snapshot_live(state: GraphState):
+    """Device-side snapshot masks: (v_live_mask, e_valid_mask).
+
+    ``e_valid_mask`` marks edge lanes that are live AND bound to both
+    endpoints' current incarnations — the same :func:`_edge_validity`
+    predicate the CSR build uses, exposed for vectorized host snapshots."""
+    _, _, e_valid = _edge_validity(state)
+    return state.v_live, e_valid

@@ -28,6 +28,11 @@ MIXES = {
     "lookup": (0.025, 0.025, 0.45, 0.025, 0.025, 0.45),
     "balanced": (0.125, 0.125, 0.25, 0.125, 0.125, 0.25),
     "update": (0.225, 0.225, 0.05, 0.225, 0.225, 0.05),
+    # traversal: edge-heavy build phase for reachability/BFS query workloads
+    # (the workload family of arXiv 1809.00896 / 2310.02380) — AddE dominates
+    # so the graph develops real path structure; RemV stays nonzero so
+    # incarnation churn and stale edges are exercised, not just membership.
+    "traversal": (0.10, 0.02, 0.08, 0.60, 0.05, 0.15),
 }
 
 _OPS = np.array(
@@ -46,6 +51,13 @@ def sample_batch(
     us = rng.integers(0, key_space, size=n).astype(np.int32)
     vs = rng.integers(0, key_space, size=n).astype(np.int32)
     return ops, us, vs
+
+
+def sample_query_pairs(rng: np.random.Generator, n: int, key_space: int = 1000):
+    """Sample (source, target) key pairs for batched reachability queries."""
+    us = rng.integers(0, key_space, size=n).astype(np.int32)
+    vs = rng.integers(0, key_space, size=n).astype(np.int32)
+    return us, vs
 
 
 def initial_vertices(key_space: int = 1000):

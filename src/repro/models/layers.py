@@ -14,6 +14,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+try:  # jax < 0.5 keeps shard_map under jax.experimental
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.kernels.flash_attention import attention as flash_attention
 from repro.kernels.flash_attention.ref import mha_chunked
 
@@ -442,7 +447,7 @@ def moe_apply_shardmap(p, cfg: ArchConfig, x, *, dp_axes=("data",),
         aux = jax.lax.pmean(aux, dp_axes)
         return out.reshape(Bl, Sl, dl), aux
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         body,
         mesh=mesh,
         in_specs=(

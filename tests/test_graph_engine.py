@@ -196,6 +196,106 @@ class TestUnboundedGrowth:
         assert (1, 2) not in E
 
 
+class TestRehashPhysicalDeletion:
+    """Growth must behave like Harris physical deletion: after a rehash the
+    new tables hold exactly the live vertices and the incarnation-valid live
+    edges — no tombstones, no stale bindings."""
+
+    @staticmethod
+    def _physical_invariants(state):
+        from repro.core.types import EMPTY_KEY
+
+        v_key = np.asarray(state.v_key)
+        v_live = np.asarray(state.v_live)
+        v_inc = np.asarray(state.v_inc)
+        # every occupied vertex slot is live (no tombstones survive rehash)
+        occupied = v_key != EMPTY_KEY
+        assert (v_live == occupied).all()
+        inc_of = {int(k): int(i) for k, i in zip(v_key[occupied], v_inc[occupied])}
+        e_ku = np.asarray(state.e_key_u)
+        e_kv = np.asarray(state.e_key_v)
+        e_live = np.asarray(state.e_live)
+        e_bu = np.asarray(state.e_inc_u)
+        e_bv = np.asarray(state.e_inc_v)
+        e_occ = e_ku != EMPTY_KEY
+        # every occupied edge slot is live and bound to both endpoints'
+        # *current* incarnations (no stale edges survive rehash)
+        assert (e_live == e_occ).all()
+        for u, v, bu, bv in zip(e_ku[e_occ], e_kv[e_occ], e_bu[e_occ], e_bv[e_occ]):
+            assert inc_of.get(int(u)) == int(bu)
+            assert inc_of.get(int(v)) == int(bv)
+
+    @pytest.mark.parametrize("mode", ["waitfree", "fpsp"])
+    def test_repeated_doubling_through_apply(self, mode):
+        """Force ≥2 table doublings via apply; oracle equivalence holds at
+        every step and the rehashed tables are physically compacted."""
+        from repro.core.graph import _rehash
+
+        g = WaitFreeGraph(v_capacity=64, e_capacity=64, mode=mode)
+        oracle = SequentialGraph()
+        rng = np.random.default_rng(31)
+        phase_caps = [(g.state.v_capacity, g.state.e_capacity)]
+        for wave in range(4):
+            lo = 100 * wave
+            keys = np.arange(lo, lo + 100, dtype=np.int32)
+            ops = np.full(100, OP_ADD_VERTEX, np.int32)
+            got = g.apply(ops, keys, np.zeros(100, np.int32))
+            exp, oracle = run_sequential(ops, keys, np.zeros(100, np.int32), graph=oracle)
+            assert got.tolist() == exp
+            # tombstones: kill a third of this wave's keys
+            kill = keys[rng.choice(100, 33, replace=False)]
+            ops = np.full(33, OP_REMOVE_VERTEX, np.int32)
+            got = g.apply(ops, kill, np.zeros(33, np.int32))
+            exp, oracle = run_sequential(ops, kill, np.zeros(33, np.int32), graph=oracle)
+            assert got.tolist() == exp
+            # edges across the live range, some of which will go stale later
+            eu = rng.integers(lo, lo + 100, 80).astype(np.int32)
+            ev = rng.integers(0, lo + 100, 80).astype(np.int32)
+            ops = np.full(80, OP_ADD_EDGE, np.int32)
+            got = g.apply(ops, eu, ev)
+            exp, oracle = run_sequential(ops, eu, ev, graph=oracle)
+            assert got.tolist() == exp
+            phase_caps.append((g.state.v_capacity, g.state.e_capacity))
+        assert g.state.v_capacity >= 64 * 4, phase_caps  # ≥2 doublings
+        assert g.snapshot() == (oracle.vertices, oracle.edges)
+        # a rehash at current capacity is a pure compaction: the abstract
+        # graph is unchanged and the physical tables are clean
+        compacted = _rehash(g.state, g.state.v_capacity, g.state.e_capacity)
+        self._physical_invariants(compacted)
+        g2 = WaitFreeGraph(mode=mode)
+        g2.state = compacted
+        assert g2.snapshot() == (oracle.vertices, oracle.edges)
+
+    def test_rehash_drops_tombstones_and_stale_edges(self):
+        """Direct check: tombstoned vertices and stale-incarnation edges are
+        physically absent after _rehash, while the abstract graph survives."""
+        from repro.core.graph import _rehash
+        from repro.core.types import EMPTY_KEY
+
+        g = WaitFreeGraph(v_capacity=64, e_capacity=64)
+        oracle = SequentialGraph()
+        seq = [(OP_ADD_VERTEX, k, 0) for k in range(10)]
+        seq += [(OP_ADD_EDGE, k, k + 1) for k in range(9)]
+        seq += [(OP_REMOVE_VERTEX, 4, 0)]          # tombstone + 2 stale edges
+        seq += [(OP_REMOVE_VERTEX, 7, 0), (OP_ADD_VERTEX, 7, 0)]  # churn
+        o, u, v = (np.asarray(c, np.int32) for c in zip(*seq))
+        got = g.apply(o, u, v)
+        exp, oracle = run_sequential(o, u, v, graph=oracle)
+        assert got.tolist() == exp
+
+        pre_used = int((np.asarray(g.state.v_key) != EMPTY_KEY).sum())
+        assert pre_used == 10  # 9 live + 1 tombstone (key 4)
+        snap_before = g.snapshot()
+        new_state = _rehash(g.state, g.state.v_capacity, g.state.e_capacity)
+        self._physical_invariants(new_state)
+        # tombstone physically dropped: only the 9 live keys remain
+        assert int((np.asarray(new_state.v_key) != EMPTY_KEY).sum()) == 9
+        # stale edges (3-4, 4-5 via removal; 6-7, 7-8 via churn) dropped
+        assert int((np.asarray(new_state.e_key_u) != EMPTY_KEY).sum()) == 5
+        g.state = new_state  # setter invalidates the cached traversal snapshot
+        assert g.snapshot() == snap_before == (oracle.vertices, oracle.edges)
+
+
 def test_paper_api_sequence():
     """The six-method API behaves per the paper's sequential spec table."""
     g = WaitFreeGraph(64, 64)

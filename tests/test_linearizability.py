@@ -1,15 +1,20 @@
-"""Property-based linearizability tests (hypothesis).
+"""Property-based linearizability tests (hypothesis, with a numpy fallback).
 
 The central invariant of the paper: every concurrent execution is equivalent
 to *some* sequential one.  Our engine is stronger — it guarantees equivalence
 to the *phase-ordered* sequential execution — so the property is exact
 equality of every op result (and of the final abstract graph) against the
 sequential oracle, for arbitrary op sequences.
+
+``hypothesis`` is an optional dependency (the ``test`` extra in
+pyproject.toml).  When it is missing this file must still collect and still
+exercise the property — the seeded numpy fuzz tests at the bottom run the
+same oracle-equivalence check over randomized op sequences unconditionally;
+the hypothesis shrinking variants layer on top when available.
 """
 
 import numpy as np
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+import pytest
 
 from repro.core import make_batch, make_state, run_sequential
 from repro.core import baselines, engine, fastpath
@@ -23,24 +28,22 @@ from repro.core.types import (
     OP_REMOVE_VERTEX,
 )
 
-# small key space forces dense conflicts — the hard case for helping logic
-ops_strategy = st.lists(
-    st.tuples(
-        st.sampled_from(
-            [OP_ADD_VERTEX, OP_REMOVE_VERTEX, OP_CONTAINS_VERTEX,
-             OP_ADD_EDGE, OP_REMOVE_EDGE, OP_CONTAINS_EDGE]
-        ),
-        st.integers(min_value=0, max_value=5),
-        st.integers(min_value=0, max_value=5),
-    ),
-    min_size=1,
-    max_size=48,
-)
+try:  # optional: the module must collect (and run the fallback) without it
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
 
-COMMON = dict(
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow],
-)
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_ALL_OPS = [OP_ADD_VERTEX, OP_REMOVE_VERTEX, OP_CONTAINS_VERTEX,
+            OP_ADD_EDGE, OP_REMOVE_EDGE, OP_CONTAINS_EDGE]
+
+_ENGINES = {
+    "waitfree": engine.apply_batch,
+    "fpsp": fastpath.apply_batch_fpsp,
+    "lockfree": baselines.apply_lockfree,
+}
 
 
 def _run(fn, seq):
@@ -54,41 +57,85 @@ def _run(fn, seq):
     return res.state, oracle
 
 
-@settings(max_examples=60, **COMMON)
-@given(ops_strategy)
-def test_waitfree_linearizable(seq):
-    _run(engine.apply_batch, seq)
+# ---------------------------------------------------------------------------
+# seeded numpy fallback: always collected, always run
+# ---------------------------------------------------------------------------
+
+def _random_seq(rng, max_len=48, key_space=6):
+    n = int(rng.integers(1, max_len + 1))
+    ops = rng.choice(_ALL_OPS, size=n)
+    us = rng.integers(0, key_space, size=n)
+    vs = rng.integers(0, key_space, size=n)
+    return list(zip(ops.tolist(), us.tolist(), vs.tolist()))
 
 
-@settings(max_examples=40, **COMMON)
-@given(ops_strategy)
-def test_fpsp_linearizable(seq):
-    _run(fastpath.apply_batch_fpsp, seq)
+@pytest.mark.parametrize("name", list(_ENGINES))
+def test_linearizable_numpy_fuzz(name):
+    """Same property as the hypothesis tests, from a seeded numpy stream —
+    small key space forces dense conflicts, the hard case for helping."""
+    rng = np.random.default_rng(0xC0FFEE + len(name))
+    n_cases = 12 if name == "lockfree" else 25
+    for _ in range(n_cases):
+        _run(_ENGINES[name], _random_seq(rng))
 
 
-@settings(max_examples=25, **COMMON)
-@given(ops_strategy)
-def test_lockfree_linearizable(seq):
-    _run(baselines.apply_lockfree, seq)
-
-
-@settings(max_examples=30, **COMMON)
-@given(ops_strategy, ops_strategy)
-def test_cross_batch_state_carries(seq1, seq2):
+def _run_cross_batch(seq1, seq2):
     """Two consecutive batches = one long sequential history."""
-    o1 = np.array([s[0] for s in seq1], np.int32)
-    u1 = np.array([s[1] for s in seq1], np.int32)
-    v1 = np.array([s[2] for s in seq1], np.int32)
-    o2 = np.array([s[0] for s in seq2], np.int32)
-    u2 = np.array([s[1] for s in seq2], np.int32)
-    v2 = np.array([s[2] for s in seq2], np.int32)
-
+    o1, u1, v1 = (np.array(c, np.int32) for c in zip(*seq1))
+    o2, u2, v2 = (np.array(c, np.int32) for c in zip(*seq2))
     st1 = make_state(128, 256)
     r1 = engine.apply_batch(st1, make_batch(o1, u1, v1))
     r2 = engine.apply_batch(r1.state, make_batch(o2, u2, v2, phase_base=len(o1)))
-
     oracle = SequentialGraph()
     e1, oracle = run_sequential(o1, u1, v1, graph=oracle)
     e2, oracle = run_sequential(o2, u2, v2, graph=oracle)
     assert np.asarray(r1.success).tolist() == e1
     assert np.asarray(r2.success).tolist() == e2
+
+
+def test_cross_batch_state_carries_numpy_fuzz():
+    rng = np.random.default_rng(2026)
+    for _ in range(10):
+        _run_cross_batch(_random_seq(rng), _random_seq(rng))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis variants: shrinking + adversarial generation, when available
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    # small key space forces dense conflicts — the hard case for helping logic
+    ops_strategy = st.lists(
+        st.tuples(
+            st.sampled_from(_ALL_OPS),
+            st.integers(min_value=0, max_value=5),
+            st.integers(min_value=0, max_value=5),
+        ),
+        min_size=1,
+        max_size=48,
+    )
+
+    COMMON = dict(
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+
+    @settings(max_examples=60, **COMMON)
+    @given(ops_strategy)
+    def test_waitfree_linearizable(seq):
+        _run(engine.apply_batch, seq)
+
+    @settings(max_examples=40, **COMMON)
+    @given(ops_strategy)
+    def test_fpsp_linearizable(seq):
+        _run(fastpath.apply_batch_fpsp, seq)
+
+    @settings(max_examples=25, **COMMON)
+    @given(ops_strategy)
+    def test_lockfree_linearizable(seq):
+        _run(baselines.apply_lockfree, seq)
+
+    @settings(max_examples=30, **COMMON)
+    @given(ops_strategy, ops_strategy)
+    def test_cross_batch_state_carries(seq1, seq2):
+        _run_cross_batch(seq1, seq2)

@@ -1,0 +1,217 @@
+"""Oracle-equivalence tests for the batched traversal engine.
+
+Every query form (pairwise reachability, BFS level maps, k-hop
+neighborhoods) and the vectorized snapshot are validated exactly against the
+sequential oracle, over deterministic constructions and ≥50 randomized
+graphs — including vertex-deletion staleness and incarnation churn, the
+Fig. 3 hazards that traversal must respect (a stale edge must never carry a
+path)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SequentialGraph,
+    WaitFreeGraph,
+    bfs_levels,
+    build_csr,
+    run_sequential,
+)
+from repro.core.types import (
+    EMPTY_KEY,
+    OP_ADD_EDGE,
+    OP_ADD_VERTEX,
+    OP_REMOVE_VERTEX,
+)
+from repro.core.workloads import sample_batch, sample_query_pairs
+
+KEY_SPACE = 24  # small key space: dense conflicts, real path structure
+
+
+def _apply_both(g: WaitFreeGraph, oracle: SequentialGraph, ops, us, vs):
+    got = g.apply(ops, us, vs)
+    exp, _ = run_sequential(ops, us, vs, graph=oracle)
+    assert got.tolist() == exp
+
+
+def _chain(g: WaitFreeGraph, oracle: SequentialGraph, keys):
+    n = len(keys)
+    ops = np.concatenate([np.full(n, OP_ADD_VERTEX, np.int32),
+                          np.full(n - 1, OP_ADD_EDGE, np.int32)])
+    us = np.concatenate([np.asarray(keys, np.int32), np.asarray(keys[:-1], np.int32)])
+    vs = np.concatenate([np.zeros(n, np.int32), np.asarray(keys[1:], np.int32)])
+    _apply_both(g, oracle, ops, us, vs)
+
+
+# ---------------------------------------------------------------------------
+# deterministic semantics
+# ---------------------------------------------------------------------------
+
+def test_chain_levels_and_khop():
+    g, o = WaitFreeGraph(64, 64), SequentialGraph()
+    _chain(g, o, [10, 11, 12, 13, 14])
+    assert g.bfs(10) == o.bfs(10) == {10: 0, 11: 1, 12: 2, 13: 3, 14: 4}
+    assert g.bfs(14) == o.bfs(14) == {14: 0}  # directed: no back edges
+    for k in range(5):
+        assert g.khop(10, k) == o.khop(10, k)
+    assert g.khop(10, 2) == {10, 11, 12}
+
+
+def test_self_reachability_and_absent_endpoints():
+    g, o = WaitFreeGraph(64, 64), SequentialGraph()
+    _chain(g, o, [1, 2])
+    for u, v in [(1, 1), (1, 2), (2, 1), (1, 99), (99, 1), (99, 99)]:
+        assert g.reachable(u, v) == o.reachable(u, v)
+    assert g.reachable(1, 1) is True     # empty path: u exists
+    assert g.reachable(99, 99) is False  # absent vertex
+    assert g.bfs(99) == {} == o.bfs(99)
+    assert g.khop(99, 3) == set() == o.khop(99, 3)
+
+
+def test_deleted_vertex_breaks_paths():
+    """Removing a cut vertex must sever every path through it."""
+    g, o = WaitFreeGraph(64, 64), SequentialGraph()
+    _chain(g, o, [1, 2, 3, 4])
+    assert g.reachable(1, 4) and o.reachable(1, 4)
+    _apply_both(g, o, [OP_REMOVE_VERTEX], [3], [0])
+    assert g.reachable(1, 4) == o.reachable(1, 4) == False
+    assert g.reachable(1, 2) == o.reachable(1, 2) == True
+    assert g.bfs(1) == o.bfs(1) == {1: 0, 2: 1}
+
+
+def test_incarnation_churn_stale_edges_carry_no_path():
+    """The Fig. 3 hazard, traversal edition: after remove+re-add of an
+    endpoint, the stale edge's binding must not conduct reachability."""
+    g, o = WaitFreeGraph(64, 64), SequentialGraph()
+    _chain(g, o, [1, 2, 3])
+    _apply_both(g, o, [OP_REMOVE_VERTEX, OP_ADD_VERTEX], [2, 2], [0, 0])
+    # 2 is live again, but edges 1->2 and 2->3 were bound to its old
+    # incarnation: nothing is reachable through it.
+    assert g.reachable(1, 3) == o.reachable(1, 3) == False
+    assert g.reachable(1, 2) == o.reachable(1, 2) == False
+    assert g.reachable(2, 3) == o.reachable(2, 3) == False
+    assert g.bfs(1) == o.bfs(1) == {1: 0}
+    # re-binding the edges at the new incarnation restores the path
+    _apply_both(g, o, [OP_ADD_EDGE, OP_ADD_EDGE], [1, 2], [2, 3])
+    assert g.reachable(1, 3) == o.reachable(1, 3) == True
+
+
+def test_batch_queries_share_one_snapshot():
+    """All queries in a batch linearize at the same batch boundary: pairs
+    issued together see identical state, and the cached CSR is invalidated
+    by the next apply."""
+    g, o = WaitFreeGraph(64, 64), SequentialGraph()
+    _chain(g, o, [1, 2, 3])
+    csr1 = g.traversal_csr()
+    assert g.traversal_csr() is csr1  # cached between applies
+    got = g.reachable([1, 1, 2], [2, 3, 3])
+    assert got.tolist() == [True, True, True]
+    _apply_both(g, o, [OP_REMOVE_VERTEX], [2], [0])
+    assert g.traversal_csr() is not csr1  # invalidated
+    assert g.reachable([1, 1, 2], [2, 3, 3]).tolist() == [False, False, False]
+
+
+def test_readonly_batches_keep_cached_snapshot():
+    """contains/NOP-only batches leave the abstract graph unchanged, so the
+    cached CSR must survive them (queries interleaved with lookups stay
+    amortized); any mutating op invalidates it."""
+    g, o = WaitFreeGraph(64, 64), SequentialGraph()
+    _chain(g, o, [1, 2, 3])
+    c0 = g.traversal_csr()
+    assert g.contains_vertex(1) and g.contains_edge(1, 2)
+    assert not g.contains_vertex(99)
+    assert g.traversal_csr() is c0
+    g.add_vertex(7)
+    assert g.traversal_csr() is not c0
+
+
+def test_csr_structure_invariants():
+    g, o = WaitFreeGraph(64, 64), SequentialGraph()
+    _chain(g, o, [1, 2, 3, 4])
+    _apply_both(g, o, [OP_ADD_EDGE, OP_ADD_EDGE], [1, 1], [3, 4])
+    csr = build_csr(g.state)
+    src = np.asarray(csr.src)
+    dst = np.asarray(csr.dst)
+    rs = np.asarray(csr.row_start)
+    re = np.asarray(csr.row_end)
+    cv = csr.v_capacity
+    assert int(csr.n_live) == 4
+    assert int(csr.n_edges) == 5
+    # sorted by source slot, invalid lanes (== Cv) pushed to the tail
+    assert (np.diff(src) >= 0).all()
+    assert (src[int(csr.n_edges):] == cv).all() and (dst[int(csr.n_edges):] == cv).all()
+    # row ranges partition the valid prefix and degrees sum to edge count
+    assert int((re - rs).sum()) == int(csr.n_edges)
+    v_key = np.asarray(csr.v_key)
+    v_live = np.asarray(csr.v_live)
+    deg = {1: 3, 2: 1, 3: 1, 4: 0}
+    for j in range(cv):
+        if v_live[j]:
+            assert int(re[j] - rs[j]) == deg[int(v_key[j])]
+            # every out-neighbor slot in the row holds a live vertex
+            for t in dst[rs[j]:re[j]]:
+                assert v_live[int(t)]
+
+
+def test_bfs_levels_padding_lanes_are_inert():
+    """EMPTY_KEY query lanes (batch padding) must return all -1 rows."""
+    g, o = WaitFreeGraph(64, 64), SequentialGraph()
+    _chain(g, o, [1, 2])
+    keys = np.asarray([1, EMPTY_KEY, 2, EMPTY_KEY], np.int32)
+    lv = np.asarray(bfs_levels(build_csr(g.state), keys))
+    assert (lv[1] == -1).all() and (lv[3] == -1).all()
+    assert (lv[0] >= 0).sum() == 2 and (lv[2] >= 0).sum() == 1
+
+
+def test_cyclic_graph_terminates_and_matches():
+    g, o = WaitFreeGraph(64, 64), SequentialGraph()
+    _chain(g, o, [1, 2, 3])
+    _apply_both(g, o, [OP_ADD_EDGE], [3], [1])  # close the cycle
+    assert g.reachable(3, 2) == o.reachable(3, 2) == True
+    assert g.bfs(2) == o.bfs(2) == {2: 0, 3: 1, 1: 2}
+
+
+# ---------------------------------------------------------------------------
+# randomized oracle equivalence: 2 modes × 25 seeds = 50 graphs
+# ---------------------------------------------------------------------------
+
+def _build_random(seed: int, mode: str):
+    rng = np.random.default_rng(seed)
+    g = WaitFreeGraph(256, 1024, mode=mode)
+    oracle = SequentialGraph()
+    for _ in range(2):
+        ops, us, vs = sample_batch(rng, 192, "traversal", key_space=KEY_SPACE)
+        _apply_both(g, oracle, ops, us, vs)
+    # deletion wave: tombstones + stale edges
+    kill = rng.choice(KEY_SPACE, size=8, replace=False).astype(np.int32)
+    _apply_both(g, oracle, np.full(8, OP_REMOVE_VERTEX, np.int32), kill,
+                np.zeros(8, np.int32))
+    # incarnation churn: re-add half of the killed keys
+    revive = kill[:4]
+    _apply_both(g, oracle, np.full(4, OP_ADD_VERTEX, np.int32), revive,
+                np.zeros(4, np.int32))
+    # fresh edges over the churned key space
+    ops, us, vs = sample_batch(rng, 96, "traversal", key_space=KEY_SPACE)
+    _apply_both(g, oracle, ops, us, vs)
+    return g, oracle, rng
+
+
+@pytest.mark.parametrize("mode", ["waitfree", "fpsp"])
+@pytest.mark.parametrize("seed", range(25))
+def test_randomized_graphs_match_oracle(mode, seed):
+    g, oracle, rng = _build_random(seed, mode)
+    # abstract state agrees
+    assert g.snapshot() == (oracle.vertices, oracle.edges)
+    # pairwise reachability, one shared snapshot
+    us, vs = sample_query_pairs(rng, 64, KEY_SPACE)
+    got = g.reachable(us, vs)
+    exp = [oracle.reachable(int(a), int(b)) for a, b in zip(us, vs)]
+    assert got.tolist() == exp
+    # full BFS level maps from random sources
+    srcs = rng.integers(0, KEY_SPACE, size=8).tolist()
+    for s, levels in zip(srcs, g.bfs_batch(srcs)):
+        assert levels == oracle.bfs(int(s))
+    # bounded-depth neighborhoods
+    u = int(rng.integers(0, KEY_SPACE))
+    k = int(rng.integers(0, 4))
+    assert g.khop(u, k) == oracle.khop(u, k)
