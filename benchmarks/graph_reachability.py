@@ -1,27 +1,41 @@
-"""Batched reachability benchmark: query-batch size × graph size × engine.
+"""Batched reachability benchmark: query-batch size × graph size × engine,
+plus frontier-kernel impls and rebuild-vs-delta snapshot maintenance.
 
 The workload family of the related papers (arXiv 1809.00896 reachability
 queries, arXiv 2310.02380 wait-free snapshots) on top of this repo's graph:
 build a graph with the ``traversal`` mix, compact it once into a consistent
 CSR snapshot, then answer batches of ``reachable(u, v)`` pairs.
 
-Engines:
+Engine/impl columns:
 
-  oracle   — pure-Python sequential BFS per query (the ground truth's cost)
-  batched  — the jitted CSR frontier engine, whole query batch per dispatch
+  oracle / python        — pure-Python sequential BFS per query (ground truth)
+  batched / reference    — jitted CSR frontier engine, pure-jnp expansion
+  batched / kernel[...]  — same engine through the Pallas frontier kernel
+                           (``kernel`` on TPU; ``kernel_interpret`` anywhere
+                           with ``--kernels``, exercising the identical code
+                           through the interpreter)
 
-Two costs are reported separately: ``snap_ms`` (one-time CSR compaction per
-graph version — amortized over every query until the next update batch) and
-``us_per_query`` (marginal per-query cost at the given batch size).
+Maintenance rows (engine ``maintenance``) time the snapshot refresh after
+each small update batch of an update-light query-heavy mix (the
+``query_heavy`` regime): ``rebuild`` pays a full ``build_csr`` per batch,
+``delta`` folds the batch in with ``traversal.apply_delta``.  ``snap_ms``
+is the mean refresh cost; ``us_per_query`` amortizes it over a 256-query
+window.  Delta below rebuild is the acceptance signal for incremental
+maintenance.
 
-CPU caveat (same as graph_throughput.py): the frontier expansion is one
-gather + one scatter-max per level, and XLA lowers the scatter near-serially
-on CPU, so absolute ``us_per_query`` compresses the batched engine's numbers;
-the machine-independent content is the *scaling* in batch size (the whole
-query batch rides one dispatch) and the one-dispatch snapshot cost.
+Two costs are reported separately: ``snap_ms`` (snapshot compaction /
+refresh per graph version — amortized over every query until the next
+update batch) and ``us_per_query`` (marginal per-query cost at the given
+batch size).
 
-Usage:  python benchmarks/graph_reachability.py [--quick]
-Output: CSV rows on stdout (bench,engine,build,graph_size,batch,...).
+CPU caveat (same as graph_throughput.py): XLA lowers the frontier scatter
+near-serially on CPU, so absolute ``us_per_query`` compresses the batched
+engine's numbers; the machine-independent content is the *scaling* in batch
+size (the whole query batch rides one dispatch), the one-dispatch snapshot
+cost, and the rebuild-vs-delta ratio.
+
+Usage:  python benchmarks/graph_reachability.py [--quick] [--kernels]
+Output: CSV rows on stdout (bench,engine,impl,build,graph_size,batch,...).
 """
 
 from __future__ import annotations
@@ -34,11 +48,17 @@ import jax
 import numpy as np
 
 from repro.core import WaitFreeGraph, traversal
-from repro.core.workloads import initial_vertices, sample_batch, sample_query_pairs
+from repro.core.workloads import (
+    initial_vertices,
+    sample_batch,
+    sample_query_pairs,
+    sample_update_batch,
+)
 
 GRAPH_SIZES = (256, 1024, 4096)
 QUERY_BATCHES = (1, 16, 128, 1024)
 ORACLE_MAX_BATCH = 128  # python BFS per query; cap its sweep and say so
+MAINT_QUERY_WINDOW = 256  # queries amortizing each maintenance refresh
 
 
 def _build_graph(key_space: int, mode: str, seed: int = 0) -> WaitFreeGraph:
@@ -53,20 +73,25 @@ def _build_graph(key_space: int, mode: str, seed: int = 0) -> WaitFreeGraph:
     return g
 
 
-def _bench_batched(g: WaitFreeGraph, pairs, timed: int):
+def _bench_snap(g: WaitFreeGraph):
+    """One-time CSR compaction cost — impl-independent, measured once per
+    graph build and shared across the impl rows."""
     jax.block_until_ready(traversal.build_csr(g.state))  # warmup / compile
     t0 = time.perf_counter()
     csr = traversal.build_csr(g.state)
     jax.block_until_ready(csr)
-    dt_snap = time.perf_counter() - t0
+    return time.perf_counter() - t0, csr
+
+
+def _bench_batched(csr, pairs, timed: int, impl=None):
     us, vs = pairs
-    r = traversal.reachable(csr, us, vs)  # warmup / compile
+    r = traversal.reachable(csr, us, vs, impl=impl)  # warmup / compile
     jax.block_until_ready(r)
     t0 = time.perf_counter()
     for _ in range(timed):
-        r = traversal.reachable(csr, us, vs)
+        r = traversal.reachable(csr, us, vs, impl=impl)
     jax.block_until_ready(r)
-    return (time.perf_counter() - t0) / timed, dt_snap, np.asarray(r)
+    return (time.perf_counter() - t0) / timed, np.asarray(r)
 
 
 def _bench_oracle(g: WaitFreeGraph, pairs, timed: int):
@@ -85,52 +110,126 @@ def _bench_oracle(g: WaitFreeGraph, pairs, timed: int):
     return dt, dt_snap, np.asarray(out)
 
 
+def _bench_maintenance(
+    key_space: int, mode: str, update_batch: int, n_batches: int, seed: int
+) -> Dict[str, float]:
+    """Mean snapshot-refresh ms per update batch, rebuild vs delta.
+
+    One graph, one update stream; after every applied batch both refresh
+    primitives are timed on the same post state — ``build_csr`` (what the
+    ``rebuild`` policy pays) and ``apply_delta`` from the previous snapshot
+    (what the ``delta`` policy pays; the result chains into the next round,
+    and tests assert it is bit-identical to the rebuild)."""
+    g = _build_graph(key_space, mode, seed)
+    g.csr_maintenance = "rebuild"  # keep WaitFreeGraph out of the timings
+    rng = np.random.default_rng(seed + 2)
+    csr = traversal.build_csr(g.state)
+    jax.block_until_ready(csr)
+    # warmup: compile the delta probe/splice and the rebuild for this shape
+    ops, us, vs = sample_update_batch(rng, update_batch, key_space)
+    g.apply(ops, us, vs)
+    jax.block_until_ready(traversal.build_csr(g.state))
+    csr = traversal.apply_delta(csr, g.state, ops, us, vs)
+    jax.block_until_ready(csr.src)
+    t_rebuild = t_delta = 0.0
+    for _ in range(n_batches):
+        ops, us, vs = sample_update_batch(rng, update_batch, key_space)
+        g.apply(ops, us, vs)
+        t0 = time.perf_counter()
+        full = traversal.build_csr(g.state)
+        jax.block_until_ready(full)
+        t_rebuild += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        csr = traversal.apply_delta(csr, g.state, ops, us, vs)
+        jax.block_until_ready(csr.src)
+        t_delta += time.perf_counter() - t0
+    return {
+        "rebuild": 1e3 * t_rebuild / n_batches,
+        "delta": 1e3 * t_delta / n_batches,
+    }
+
+
 def run(
     graph_sizes=GRAPH_SIZES,
     batches=QUERY_BATCHES,
     build_modes=("waitfree", "fpsp"),
     timed: int = 8,
     seed: int = 0,
+    kernels: bool = False,
+    maint_batches: int = 8,
 ) -> List[Dict]:
+    impls = [("reference", "reference")]  # explicit: impl=None auto-picks the kernel on TPU
+    if jax.default_backend() == "tpu":
+        impls.append(("kernel", "kernel"))
+    elif kernels:
+        impls.append(("kernel_interpret", "kernel_interpret"))
     rows = []
     for key_space in graph_sizes:
         for mode in build_modes:
             g = _build_graph(key_space, mode, seed)
             rng = np.random.default_rng(seed + 1)
+            snap_b, csr = _bench_snap(g)
             for n in batches:
                 pairs = sample_query_pairs(rng, n, key_space)
-                dt_b, snap_b, out_b = _bench_batched(g, pairs, timed)
-                rows.append(dict(engine="batched", build=mode, graph_size=key_space,
-                                 batch=n, snap_ms=1e3 * snap_b,
-                                 us_per_query=1e6 * dt_b / n))
+                ref_out = None
+                for impl_name, impl in impls:
+                    dt_b, out_b = _bench_batched(csr, pairs, timed, impl)
+                    rows.append(dict(engine="batched", impl=impl_name, build=mode,
+                                     graph_size=key_space, batch=n,
+                                     snap_ms=1e3 * snap_b,
+                                     us_per_query=1e6 * dt_b / n))
+                    if ref_out is None:
+                        ref_out = out_b
+                    else:
+                        assert out_b.tolist() == ref_out.tolist(), "impls disagree"
                 if n > ORACLE_MAX_BATCH:
                     # stderr: stdout is the documented CSV contract
                     print(f"# dropped: oracle @ batch {n} (python BFS per query; "
                           f"capped at {ORACLE_MAX_BATCH})", file=sys.stderr)
                     continue
                 dt_o, snap_o, out_o = _bench_oracle(g, pairs, max(1, timed // 4))
-                assert out_b.tolist() == out_o.tolist(), "engines disagree"
-                rows.append(dict(engine="oracle", build=mode, graph_size=key_space,
-                                 batch=n, snap_ms=1e3 * snap_o,
+                assert ref_out.tolist() == out_o.tolist(), "engines disagree"
+                rows.append(dict(engine="oracle", impl="python", build=mode,
+                                 graph_size=key_space, batch=n,
+                                 snap_ms=1e3 * snap_o,
                                  us_per_query=1e6 * dt_o / n))
+            # rebuild-vs-delta maintenance on the update-light mix
+            update_batch = 16
+            maint = _bench_maintenance(
+                key_space, mode, update_batch, maint_batches, seed
+            )
+            for policy, snap_ms in maint.items():
+                rows.append(dict(engine="maintenance", impl=policy, build=mode,
+                                 graph_size=key_space, batch=update_batch,
+                                 snap_ms=snap_ms,
+                                 us_per_query=1e3 * snap_ms / MAINT_QUERY_WINDOW))
     return rows
 
 
-def main(quick: bool = False):
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--quick" in argv
+    kernels = "--kernels" in argv
     rows = run(
-        graph_sizes=(256, 1024) if quick else GRAPH_SIZES,
+        # 512 floor: at 256 the whole edge table is small enough that a full
+        # rebuild costs about as much as the delta's fixed overhead, and the
+        # maintenance comparison drowns in scheduler noise on shared CI
+        graph_sizes=(512, 1024) if quick else GRAPH_SIZES,
         batches=(16, 128) if quick else QUERY_BATCHES,
         build_modes=("waitfree",) if quick else ("waitfree", "fpsp"),
         timed=2 if quick else 8,
+        kernels=kernels,
+        maint_batches=8,
     )
-    print("bench,engine,build,graph_size,batch,snap_ms,us_per_query")
+    print("bench,engine,impl,build,graph_size,batch,snap_ms,us_per_query")
     for r in rows:
         print(
-            f"graph_reachability,{r['engine']},{r['build']},{r['graph_size']},"
-            f"{r['batch']},{r['snap_ms']:.3f},{r['us_per_query']:.2f}"
+            f"graph_reachability,{r['engine']},{r['impl']},{r['build']},"
+            f"{r['graph_size']},{r['batch']},{r['snap_ms']:.3f},"
+            f"{r['us_per_query']:.2f}"
         )
     return rows
 
 
 if __name__ == "__main__":
-    main(quick="--quick" in sys.argv[1:])
+    main()

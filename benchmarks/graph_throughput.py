@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core import baselines, engine, fastpath
 from repro.core.types import make_batch, make_state
-from repro.core.workloads import MIXES, initial_vertices, sample_batch
+from repro.core.workloads import initial_vertices, sample_batch
 
 ENGINES = {
     "coarse": baselines.apply_coarse,

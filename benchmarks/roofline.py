@@ -117,7 +117,8 @@ def model_flops(cfg, shape: Dict, kind: str) -> float:
             l_attn = cfg.n_layers // cfg.shared_attn_every
         attn_dec = 4 * l_attn * cfg.n_heads * cfg.head_dim * s_ctx
         if cfg.xattn_every:
-            attn_dec += 4 * (cfg.n_layers // cfg.xattn_every) * cfg.n_heads * cfg.head_dim * cfg.n_img_tokens
+            attn_dec += (4 * (cfg.n_layers // cfg.xattn_every)
+                         * cfg.n_heads * cfg.head_dim * cfg.n_img_tokens)
     else:
         attn_dec = 0.0
     return B * (2 * n_active + d_logits + attn_dec)

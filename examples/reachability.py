@@ -1,19 +1,26 @@
-"""Batched wait-free reachability + snapshot queries, end to end.
+"""Batched wait-free reachability + snapshot + GetPath queries, end to end.
 
     PYTHONPATH=src python examples/reachability.py
 
 Builds a graph under the ``traversal`` mix, then answers reachability, BFS
-level, and k-hop neighborhood queries — every query batch runs against one
-consistent CSR snapshot of the post-batch state (linearized at the batch
-boundary, like the wait-free GetPath/snapshot of arXiv 1809.00896 and
-2310.02380), and every answer is cross-checked against the sequential
-oracle.
+level, k-hop neighborhood, and explicit shortest-path (``GetPath``) queries
+— every query batch runs against one consistent CSR snapshot of the
+post-batch state (linearized at the batch boundary, like the wait-free
+GetPath/snapshot of arXiv 1809.00896 and 2310.02380), and every answer is
+cross-checked against the sequential oracle.  Update batches between
+queries are folded into the cached snapshot incrementally
+(``csr_maintenance="delta"``, the default) instead of forcing a rebuild.
 """
 
 import numpy as np
 
-from repro.core import SequentialGraph, WaitFreeGraph, run_sequential
-from repro.core.workloads import initial_vertices, sample_batch, sample_query_pairs
+from repro.core import SequentialGraph, WaitFreeGraph, build_csr, run_sequential
+from repro.core.workloads import (
+    initial_vertices,
+    sample_batch,
+    sample_query_pairs,
+    sample_update_batch,
+)
 
 KEY_SPACE = 64
 rng = np.random.default_rng(7)
@@ -60,13 +67,41 @@ for k in (1, 2, 3):
     assert nb == oracle.khop(hub, k)
     print(f"  ≤{k} hops: {len(nb)} vertices")
 
+# explicit shortest paths (the papers' GetPath): valid + length-optimal
+far = max(levels, key=levels.get)
+path = g.get_path(hub, far)
+exp = oracle.path(hub, far)
+assert path is not None and len(path) == len(exp)
+for a, b in zip(path, path[1:]):
+    assert (a, b) in oracle.edges
+print(f"get_path {hub} -> {far}: {path} ({len(path) - 1} hops, oracle-shortest)")
+
+# incremental snapshot maintenance: small update batches fold into the
+# cached CSR (bit-identical to a rebuild) instead of discarding it
+ops, us, vs = sample_update_batch(rng, 8, KEY_SPACE)
+got = g.apply(ops, us, vs)
+exp_res, oracle = run_sequential(ops, us, vs, graph=oracle)
+assert got.tolist() == exp_res
+delta_csr = g.traversal_csr()          # maintained by apply_delta inside apply
+full_csr = build_csr(g.state)          # ground-truth rebuild
+assert all(
+    np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(delta_csr, full_csr)
+)
+print(f"delta-maintained snapshot == full rebuild "
+      f"({int(full_csr.n_edges)} edges) after an 8-op update batch")
+
 # deletion + incarnation churn: paths through a removed vertex disappear,
 # and re-adding the vertex must NOT resurrect its old edges (Fig. 3 hazard)
+levels = g.bfs(hub)
 victim = next(w for w, d in levels.items() if d == 1)  # a direct neighbor
-g.remove_vertex(victim); oracle.remove_vertex(victim)
-g.add_vertex(victim); oracle.add_vertex(victim)
+g.remove_vertex(victim)
+oracle.remove_vertex(victim)
+g.add_vertex(victim)
+oracle.add_vertex(victim)
 assert g.bfs(hub) == oracle.bfs(hub)
 assert not g.reachable(hub, victim)
+assert g.get_path(hub, victim) is None
 print(f"after remove+re-add of {victim}: hub reaches "
       f"{len(g.bfs(hub))} vertices (stale edges carry no path)")
 print("all traversal answers match the sequential oracle")

@@ -13,7 +13,16 @@ Public API:
 
 from .graph import WaitFreeGraph
 from .oracle import SequentialGraph, run_sequential
-from .traversal import TraversalCSR, bfs_levels, build_csr, khop_mask, reachable
+from .traversal import (
+    TraversalCSR,
+    apply_delta,
+    bfs_levels,
+    bfs_parents,
+    build_csr,
+    khop_mask,
+    path_probe,
+    reachable,
+)
 from .types import (
     OP_ADD_EDGE,
     OP_ADD_VERTEX,
@@ -35,7 +44,10 @@ __all__ = [
     "run_sequential",
     "TraversalCSR",
     "build_csr",
+    "apply_delta",
     "bfs_levels",
+    "bfs_parents",
+    "path_probe",
     "reachable",
     "khop_mask",
     "GraphState",

@@ -37,8 +37,6 @@ oracle, not allclose.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

@@ -24,8 +24,6 @@ pass entirely when a batch is conflict-free.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

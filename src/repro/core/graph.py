@@ -36,7 +36,6 @@ from .types import (
     OP_REMOVE_EDGE,
     OP_REMOVE_VERTEX,
     GraphState,
-    OpBatch,
     make_batch,
     make_state,
 )
@@ -156,13 +155,34 @@ class WaitFreeGraph:
       * ``"waitfree"`` — full phase-ordered helping pass (paper §3).
       * ``"fpsp"``     — fast-path-slow-path (paper §3.4): conflict-free ops
         take a sort-free vectorized path; only conflicted ops pay the scans.
+
+    ``traversal_impl`` selects the frontier-expansion backend for every
+    traversal query (``None`` = auto: Pallas kernel on TPU, pure-jnp
+    reference elsewhere; ``"kernel"`` / ``"kernel_interpret"`` /
+    ``"reference"`` force one — see :mod:`repro.kernels.frontier`).
+
+    ``csr_maintenance`` picks what happens to a cached traversal snapshot
+    when an update batch lands: ``"delta"`` folds the batch into it with
+    :func:`repro.core.traversal.apply_delta` (bit-identical to a rebuild,
+    O(batch) instead of O(capacity) — the win for update-light query-heavy
+    mixes), ``"rebuild"`` discards it and recompacts lazily on next query.
     """
 
-    def __init__(self, v_capacity: int = 1024, e_capacity: int = 4096, mode: str = "waitfree"):
+    def __init__(
+        self,
+        v_capacity: int = 1024,
+        e_capacity: int = 4096,
+        mode: str = "waitfree",
+        traversal_impl: Optional[str] = None,
+        csr_maintenance: str = "delta",
+    ):
         assert mode in ("waitfree", "fpsp")
+        assert csr_maintenance in ("delta", "rebuild")
         self._csr: Optional[traversal.TraversalCSR] = None  # cached snapshot
         self.state = make_state(v_capacity, e_capacity)
         self.mode = mode
+        self.traversal_impl = traversal_impl
+        self.csr_maintenance = csr_maintenance
         self._phase = 0  # the paper's maxPhase counter
 
     @property
@@ -172,9 +192,12 @@ class WaitFreeGraph:
     @state.setter
     def state(self, value: GraphState) -> None:
         # any state swap (apply, growth, or a caller installing a rehashed
-        # state directly) invalidates the cached traversal snapshot
+        # state directly) invalidates the cached traversal snapshot AND any
+        # pending delta queue (its base snapshot no longer matches the state)
         self._state = value
         self._csr = None
+        self._delta_base = None
+        self._delta_batches = []
 
     # -- batched API ------------------------------------------------------
     def apply(self, ops, us, vs=None) -> np.ndarray:
@@ -192,35 +215,59 @@ class WaitFreeGraph:
         # read-only batches (contains/NOP only) leave the abstract graph
         # unchanged, so the cached traversal snapshot stays valid — keep it
         # across the state swap below instead of forcing a CSR rebuild.
-        mutating = bool(np.isin(np.asarray(ops, np.int32),
-                                (OP_ADD_VERTEX, OP_REMOVE_VERTEX,
-                                 OP_ADD_EDGE, OP_REMOVE_EDGE)).any())
+        ops0 = np.asarray(ops, np.int32)
+        us0 = np.asarray(us, np.int32)
+        vs0 = np.zeros_like(us0) if vs is None else np.asarray(vs, np.int32)
+        mutating = bool(np.isin(ops0, (OP_ADD_VERTEX, OP_REMOVE_VERTEX,
+                                       OP_ADD_EDGE, OP_REMOVE_EDGE)).any())
         saved_csr = None if mutating else self._csr
+        # the pending-delta queue (base snapshot + unpadded batches since the
+        # last query) survives the state swap below: read-only batches carry
+        # it unchanged, mutating batches append to it so the next query folds
+        # the whole queue in one apply_delta (lazy: an update-heavy stream
+        # between queries pays nothing per batch, one fold per query epoch)
+        delta_base, delta_batches = self._delta_base, self._delta_batches
+        if mutating and self.csr_maintenance == "delta" and self._csr is not None:
+            delta_base, delta_batches = self._csr, []
         bucket = max(64, 1 << max(n - 1, 1).bit_length())
+        ops, us, vs = ops0, us0, vs0
         if bucket != n:
-            pad = bucket - n
-            ops = np.concatenate([np.asarray(ops, np.int32),
-                                  np.zeros(pad, np.int32)])  # OP_NOP = 0
-            us = np.concatenate([np.asarray(us, np.int32),
-                                 np.zeros(pad, np.int32)])
-            if vs is not None:
-                vs = np.concatenate([np.asarray(vs, np.int32),
-                                     np.zeros(pad, np.int32)])
+            pad = np.zeros(bucket - n, np.int32)  # OP_NOP = 0
+            ops = np.concatenate([ops0, pad])
+            us = np.concatenate([us0, pad])
+            vs = np.concatenate([vs0, pad])
         batch = make_batch(ops, us, vs, phase_base=self._phase)
         self._phase += batch.size
         apply_fn = engine.apply_batch if self.mode == "waitfree" else fastpath.apply_batch_fpsp
 
-        for _ in range(_MAX_GROW_ATTEMPTS):
+        for attempt in range(_MAX_GROW_ATTEMPTS):
             # keep the pre-state alive for transactional retry
             pre = self.state
             res = apply_fn(pre, batch)
             if bool(res.ok) and not self._needs_growth(res.state):
                 self.state = res.state
-                if saved_csr is not None:
+                if attempt > 0:
+                    # growth rehashed the tables: every slot moved, so both
+                    # the saved snapshot's and the queue's bases are void —
+                    # the state setter already dropped them; recompact lazily
+                    return np.asarray(res.success)[:n]
+                if not mutating:
                     # abstractly identical pre/post state: the saved snapshot
-                    # (which holds its own references to the old tables)
-                    # answers queries correctly even if growth ever rehashed
+                    # (own references to the old tables) and any pending
+                    # queue stay exactly as valid as before the batch
                     self._csr = saved_csr
+                    self._delta_base = delta_base
+                    self._delta_batches = delta_batches
+                elif delta_base is not None and self.csr_maintenance == "delta":
+                    # queue the batch against the remembered base snapshot;
+                    # traversal_csr() folds the queue on the next query.  A
+                    # queue past the fold's own fallback threshold would
+                    # rebuild anyway — drop it and stop accumulating.
+                    delta_batches = delta_batches + [(ops0, us0, vs0)]
+                    if sum(b[0].size for b in delta_batches) > delta_base.e_capacity // 4:
+                        delta_base, delta_batches = None, []
+                    self._delta_base = delta_base
+                    self._delta_batches = delta_batches
                 return np.asarray(res.success)[:n]
             # discard post-state; grow from pre-state; retry the same batch
             self.state = self._grow(pre)
@@ -275,20 +322,35 @@ class WaitFreeGraph:
     # is that batch boundary, like the related papers' wait-free snapshots).
 
     def traversal_csr(self) -> traversal.TraversalCSR:
-        """The cached consistent snapshot all queries linearize against."""
+        """The cached consistent snapshot all queries linearize against.
+
+        With ``csr_maintenance="delta"``, update batches queued since the
+        last query are folded into the previous snapshot in one
+        :func:`repro.core.traversal.apply_delta` call (result-blind
+        reconciliation re-probes the union of touched keys against the
+        *current* state, so one fold over many batches is exact); otherwise
+        the snapshot is recompacted from scratch."""
         if self._csr is None:
-            self._csr = traversal.build_csr(self.state)
+            if self._delta_base is not None and self._delta_batches:
+                self._csr = traversal.apply_delta(
+                    self._delta_base,
+                    self.state,
+                    np.concatenate([b[0] for b in self._delta_batches]),
+                    np.concatenate([b[1] for b in self._delta_batches]),
+                    np.concatenate([b[2] for b in self._delta_batches]),
+                )
+            else:
+                self._csr = traversal.build_csr(self.state)
+            self._delta_base = None
+            self._delta_batches = []
         return self._csr
 
     @staticmethod
     def _pad_keys(keys: Sequence[int]) -> Tuple[np.ndarray, int]:
         """Pad a query key batch to a power-of-two bucket with EMPTY_KEY lanes
         (same recompile-avoidance trick as ``apply``'s NOP padding)."""
-        n = len(keys)
-        bucket = max(16, 1 << max(n - 1, 1).bit_length())
-        out = np.full(bucket, EMPTY_KEY, np.int32)
-        out[:n] = np.asarray(keys, np.int32)
-        return out, n
+        arr = np.asarray(keys, np.int32)
+        return traversal._pad_pow2(arr, int(EMPTY_KEY)), arr.shape[0]
 
     def reachable(self, us, vs) -> np.ndarray:
         """Batched directed reachability: bool[n], ``us[i] ↝ vs[i]``.
@@ -302,7 +364,9 @@ class WaitFreeGraph:
             raise ValueError(f"reachable: {len(us)} sources vs {len(vs)} targets")
         pu, n = self._pad_keys(us)
         pv, _ = self._pad_keys(vs)
-        out = np.asarray(traversal.reachable(self.traversal_csr(), pu, pv))[:n]
+        out = np.asarray(
+            traversal.reachable(self.traversal_csr(), pu, pv, impl=self.traversal_impl)
+        )[:n]
         return bool(out[0]) if scalar else out
 
     def bfs(self, u: int) -> Dict[int, int]:
@@ -314,7 +378,7 @@ class WaitFreeGraph:
         """Batched BFS: one level map per source, all against one snapshot."""
         pk, n = self._pad_keys(sources)
         csr = self.traversal_csr()
-        levels = np.asarray(traversal.bfs_levels(csr, pk))[:n]
+        levels = np.asarray(traversal.bfs_levels(csr, pk, impl=self.traversal_impl))[:n]
         v_key = np.asarray(csr.v_key)
         out = []
         for row in levels:
@@ -326,9 +390,46 @@ class WaitFreeGraph:
         """Vertex keys within ≤k directed hops of ``u`` (including ``u``)."""
         pk, _ = self._pad_keys([u])
         csr = self.traversal_csr()
-        mask = np.asarray(traversal.khop_mask(csr, pk, np.int32(k)))[0]
+        mask = np.asarray(
+            traversal.khop_mask(csr, pk, np.int32(k), impl=self.traversal_impl)
+        )[0]
         v_key = np.asarray(csr.v_key)
         return {int(v_key[j]) for j in np.nonzero(mask)[0]}
+
+    def get_path(self, u: int, v: int) -> Optional[List[int]]:
+        """A shortest directed path ``u ↝ v`` as an explicit key list
+        (``[u, ..., v]``; ``[u]`` when u == v), or ``None`` when unreachable
+        or either endpoint is absent — the papers' ``GetPath``."""
+        return self.get_path_batch([u], [v])[0]
+
+    def get_path_batch(self, us, vs) -> List[Optional[List[int]]]:
+        """Batched ``GetPath``: one shortest path (or None) per (u, v) pair,
+        all answered against one snapshot.
+
+        The device half (:func:`repro.core.traversal.path_probe`) records a
+        parent slot per reached vertex as one extra scatter in the BFS level
+        loop; the host walks the parent chain back from each target — at
+        most one step per level, so reconstruction is O(path length)."""
+        if len(us) != len(vs):
+            raise ValueError(f"get_path_batch: {len(us)} sources vs {len(vs)} targets")
+        pu, n = self._pad_keys(us)
+        pv, _ = self._pad_keys(vs)
+        csr = self.traversal_csr()
+        levels, parents, vslot, vlive = (
+            np.asarray(x)
+            for x in traversal.path_probe(csr, pu, pv, impl=self.traversal_impl)
+        )
+        v_key = np.asarray(csr.v_key)
+        out: List[Optional[List[int]]] = []
+        for i in range(n):
+            if not vlive[i] or levels[i, vslot[i]] < 0:
+                out.append(None)
+                continue
+            chain = [int(vslot[i])]
+            while levels[i, chain[-1]] > 0:
+                chain.append(int(parents[i, chain[-1]]))
+            out.append([int(v_key[s]) for s in reversed(chain)])
+        return out
 
     # -- introspection ------------------------------------------------------
     def snapshot(self) -> Tuple[set, set]:

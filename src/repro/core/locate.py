@@ -67,7 +67,11 @@ def locate_vertices(v_key: jnp.ndarray, keys: jnp.ndarray, active: jnp.ndarray) 
 
 
 def locate_edges(
-    e_key_u: jnp.ndarray, e_key_v: jnp.ndarray, us: jnp.ndarray, vs: jnp.ndarray, active: jnp.ndarray
+    e_key_u: jnp.ndarray,
+    e_key_v: jnp.ndarray,
+    us: jnp.ndarray,
+    vs: jnp.ndarray,
+    active: jnp.ndarray,
 ) -> LocateResult:
     cap = e_key_u.shape[0]
     home = hash_edge(us, vs, cap)

@@ -16,7 +16,7 @@ Semantics follow the paper's §2.1 on the *abstract* graph G=(V, E):
 from __future__ import annotations
 
 from collections import deque
-from typing import Dict, Iterable, List, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .types import (
     OP_ADD_EDGE,
@@ -102,6 +102,32 @@ class SequentialGraph:
     def khop(self, u: int, k: int) -> Set[int]:
         """Vertices within ≤k directed hops of u (including u)."""
         return {w for w, d in self.bfs(u).items() if d <= k}
+
+    def path(self, u: int, v: int) -> Optional[List[int]]:
+        """A shortest directed path u ↝ v as ``[u, ..., v]``, or None when
+        unreachable / either endpoint absent.  ``path(u, u) == [u]`` when u
+        exists (the empty path).  Ties between equal-length paths are broken
+        arbitrarily — callers check validity + length, not the exact route
+        (the engine's deterministic min-parent choice need not match)."""
+        if u not in self.vertices or v not in self.vertices:
+            return None
+        adj: Dict[int, List[int]] = {}
+        for a, b in self.edges:
+            adj.setdefault(a, []).append(b)
+        parent = {u: u}
+        q = deque([u])
+        while q and v not in parent:
+            a = q.popleft()
+            for b in adj.get(a, ()):
+                if b not in parent:
+                    parent[b] = a
+                    q.append(b)
+        if v not in parent:
+            return None
+        chain = [v]
+        while chain[-1] != u:
+            chain.append(parent[chain[-1]])
+        return list(reversed(chain))
 
     def apply(self, op: int, u: int, v: int) -> bool:
         if op == OP_ADD_VERTEX:

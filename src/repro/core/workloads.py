@@ -33,6 +33,12 @@ MIXES = {
     # so the graph develops real path structure; RemV stays nonzero so
     # incarnation churn and stale edges are exercised, not just membership.
     "traversal": (0.10, 0.02, 0.08, 0.60, 0.05, 0.15),
+    # query_heavy: the update-light regime where incremental CSR maintenance
+    # (traversal.apply_delta) amortizes snap_ms — a trickle of mutations
+    # (incl. RemV churn) under a flood of membership lookups.  Its
+    # mutation-only restriction (renormalized) is what sample_update_batch
+    # draws from, so the update side of the mix has a single definition.
+    "query_heavy": (0.010, 0.003, 0.42, 0.045, 0.012, 0.51),
 }
 
 _OPS = np.array(
@@ -54,10 +60,25 @@ def sample_batch(
 
 
 def sample_query_pairs(rng: np.random.Generator, n: int, key_space: int = 1000):
-    """Sample (source, target) key pairs for batched reachability queries."""
+    """Sample (source, target) key pairs for batched reachability/GetPath
+    queries."""
     us = rng.integers(0, key_space, size=n).astype(np.int32)
     vs = rng.integers(0, key_space, size=n).astype(np.int32)
     return us, vs
+
+
+def sample_update_batch(rng: np.random.Generator, n: int, key_space: int = 1000):
+    """Sample a small all-mutating batch — the mutation-only restriction of
+    the ``query_heavy`` mix, renormalized (edge-add dominated, RemV nonzero
+    so delta maintenance sees incarnation churn, not just inserts).  Sized
+    so ``apply_delta`` folds it into a cached CSR for O(batch) instead of an
+    O(capacity) rebuild."""
+    probs = np.asarray(MIXES["query_heavy"], float)
+    probs = np.where(np.isin(_OPS, (OP_CONTAINS_VERTEX, OP_CONTAINS_EDGE)), 0.0, probs)
+    ops = _OPS[rng.choice(6, size=n, p=probs / probs.sum())]
+    us = rng.integers(0, key_space, size=n).astype(np.int32)
+    vs = rng.integers(0, key_space, size=n).astype(np.int32)
+    return ops, us, vs
 
 
 def initial_vertices(key_space: int = 1000):

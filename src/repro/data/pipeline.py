@@ -18,7 +18,7 @@ external data dependency (the paper needs no corpus; the LM substrate does).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

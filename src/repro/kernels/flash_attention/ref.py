@@ -117,18 +117,27 @@ def mha_chunked(
     kb = k.reshape(B, Hkv, nk, block_k, D).transpose(2, 0, 1, 3, 4)
     vb = v.reshape(B, Hkv, nk, block_k, D).transpose(2, 0, 1, 3, 4)
 
-    _pin_q = _pin_kv = _pin_o = lambda t: t
     if seq_spec is not None:
         from jax.sharding import PartitionSpec as P
 
         dp, mdl = seq_spec
-        _pin_q = lambda t: jax.lax.with_sharding_constraint(
-            t, P(None, dp, None, None, mdl, None))
-        _pin_kv = lambda t: jax.lax.with_sharding_constraint(
-            t, P(None, dp, None, None, None))
-        _pin_o = lambda t: jax.lax.with_sharding_constraint(
-            t, P(dp, None, None, mdl, None))
+
+        def _pin_q(t):
+            return jax.lax.with_sharding_constraint(
+                t, P(None, dp, None, None, mdl, None))
+
+        def _pin_kv(t):
+            return jax.lax.with_sharding_constraint(
+                t, P(None, dp, None, None, None))
+
+        def _pin_o(t):
+            return jax.lax.with_sharding_constraint(
+                t, P(dp, None, None, mdl, None))
+
         qb, kb, vb = _pin_q(qb), _pin_kv(kb), _pin_kv(vb)
+    else:
+        def _pin_o(t):
+            return t
 
     def q_body(_, xs):
         qi, iq = xs  # (B,Hkv,g,block_q,D), scalar block index

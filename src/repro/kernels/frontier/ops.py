@@ -1,0 +1,38 @@
+"""Public entry point for the batched frontier expansion.
+
+Dispatch mirrors ``repro.kernels.hash_probe``: the Pallas kernel on TPU,
+the pure-jnp reference elsewhere.  ``REPRO_FRONTIER_IMPL`` overrides the
+default (CI's ``kernels-interpret`` job sets it to ``kernel_interpret`` so
+the interpreter path is forced on CPU).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def frontier_expand(
+    frontier: jnp.ndarray,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    *,
+    impl: str | None = None,
+) -> jnp.ndarray:
+    impl = (
+        impl
+        or os.environ.get("REPRO_FRONTIER_IMPL")
+        or ("kernel" if jax.default_backend() == "tpu" else "reference")
+    )
+    if impl == "kernel":
+        return _kernel.frontier_expand(frontier, src, dst)
+    if impl == "kernel_interpret":
+        return _kernel.frontier_expand(frontier, src, dst, interpret=True)
+    if impl == "reference":
+        return _ref.frontier_expand_reference(frontier, src, dst)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,30 @@
+"""Pure-jnp reference for one BFS frontier expansion.
+
+One level of the traversal engine's batched BFS is a gather + scatter-min:
+every edge lane whose *source* slot is on the frontier proposes its source
+slot as the parent of its *destination* slot, and each destination keeps the
+minimum proposer.  The scatter-min folds the papers' ``GetPath`` parent
+pointer into the same pass that discovers the frontier: a column is newly
+reached iff its min proposer is not :data:`NBR_INF`, and that proposer *is*
+its BFS parent (deterministic — min is order-independent, so the Pallas
+kernel tiling the same reduction matches bit-exactly).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# "no in-frontier neighbor" sentinel: larger than any slot index.
+NBR_INF = np.int32(np.iinfo(np.int32).max)
+
+
+def frontier_expand_reference(
+    frontier: jnp.ndarray,  # bool[S, C] — per-source frontier masks
+    src: jnp.ndarray,       # i32[Ce] — edge source slots, values in [0, C)
+    dst: jnp.ndarray,       # i32[Ce] — edge destination slots, values in [0, C)
+) -> jnp.ndarray:
+    """i32[S, C]: min frontier source slot over in-edges, NBR_INF where none."""
+    cand = jnp.where(frontier[:, src], src[None, :].astype(jnp.int32), NBR_INF)
+    out = jnp.full(frontier.shape, NBR_INF, jnp.int32)
+    return out.at[:, dst].min(cand)

@@ -76,8 +76,8 @@ def _paged_kernel(
 
     @pl.when(p == np_ - 1)
     def _finalize():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))

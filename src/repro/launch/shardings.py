@@ -11,10 +11,7 @@ Rules (with divisibility fallbacks so every assigned arch × shape lowers):
 
 from __future__ import annotations
 
-from typing import Any, Dict
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ArchConfig

@@ -19,13 +19,11 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES
 from repro.models import LM
 from repro.models.config import ArchConfig
-from repro.models.layers import padded_vocab
-from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim import AdamWConfig, adamw_update
 from repro.optim.adamw import opt_pspecs
 
 from .shardings import batch_pspecs, cache_pspecs, logical_dp
@@ -186,7 +184,10 @@ def opt_state_specs(cfg: ArchConfig, mesh, *, multi_pod: bool):
     model = LM(cfg)
     pshapes = model.shapes()
     ppspecs = model.pspecs(multi_pod=multi_pod)
-    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+
+    def f32(s):
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32)
+
     shapes = {
         "m": jax.tree.map(f32, pshapes),
         "v": jax.tree.map(f32, pshapes),

@@ -19,13 +19,10 @@ Production behaviours demonstrated at CPU scale (all tested):
 from __future__ import annotations
 
 import argparse
-import os
 import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -16,8 +16,6 @@ the full-model decode can lax.scan over stacked layers.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -187,7 +185,10 @@ def rwkv6_block_apply(p, cfg: ArchConfig, x, state=None, *, chunk=64):
     xa = norm_apply(p["ln1"], cfg, x)
     xs = _token_shift(xa, tprev)
     mu = p["mu"].astype(xa.dtype)
-    mix = lambda i: xa + (xs - xa) * mu[i]
+
+    def mix(i):
+        return xa + (xs - xa) * mu[i]
+
     r = jnp.einsum("bsd,dk->bsk", mix(0), p["wr"])
     kk = jnp.einsum("bsd,dk->bsk", mix(1), p["wk"])
     vv = jnp.einsum("bsd,dk->bsk", mix(2), p["wv"])
@@ -197,7 +198,9 @@ def rwkv6_block_apply(p, cfg: ArchConfig, x, state=None, *, chunk=64):
     dw = jnp.einsum("bsl,ld->bsd", dw, p["wB"]) + p["w0"]
     w = jnp.exp(-jnp.exp(dw))                                   # (B,S,d) in (0,1)
 
-    to_heads = lambda t: t.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    def to_heads(t):
+        return t.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+
     rh, kh, vh, wh = to_heads(r), to_heads(kk), to_heads(vv), to_heads(w.astype(x.dtype))
 
     if decode:

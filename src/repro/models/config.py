@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax.numpy as jnp
 
@@ -95,7 +95,11 @@ def reduced_for_smoke(cfg: ArchConfig) -> ArchConfig:
     if cfg.ssm is not None:
         ssm = SSMConfig(state=16, head_dim=16, conv=4, decay_lora=8)
     return cfg.scaled(
-        n_layers=min(cfg.n_layers, 4) if cfg.shared_attn_every is None and cfg.xattn_every is None else 6,
+        n_layers=(
+            min(cfg.n_layers, 4)
+            if cfg.shared_attn_every is None and cfg.xattn_every is None
+            else 6
+        ),
         d_model=128,
         n_heads=4 if cfg.n_heads else 0,
         n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0,

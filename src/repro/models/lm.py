@@ -16,8 +16,7 @@ constraints inside attention when ``run["sp"]`` is set.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -271,7 +270,9 @@ class LM:
             group_body = jax.checkpoint(group_body)
             mamba_tail = jax.checkpoint(mamba_body)
 
-        group = lambda a: a[:n_head].reshape((n_groups, every) + a.shape[1:])
+        def group(a):
+            return a[:n_head].reshape((n_groups, every) + a.shape[1:])
+
         x, ns_head = jax.lax.scan(
             group_body, x,
             (jax.tree.map(group, params["blocks"]), jax.tree.map(group, states)),
@@ -281,7 +282,10 @@ class LM:
         )
         if n_head == cfg.n_layers:
             return x, jnp.float32(0.0), ns_head
-        tail = lambda a: a[n_head:]
+
+        def tail(a):
+            return a[n_head:]
+
         x, ns_tail = jax.lax.scan(
             mamba_tail, x,
             (jax.tree.map(tail, params["blocks"]), jax.tree.map(tail, states)),
@@ -408,13 +412,16 @@ class LM:
         # mixtral decode_32k iteration) at the cost of nothing — the psum
         # after row-sharded projections already exists.
         if run.get("decode_pin_replicated"):
-            pin = lambda t: jax.lax.with_sharding_constraint(
-                t, P(run["dp_axes"], None, None))
+            def pin(t):
+                return jax.lax.with_sharding_constraint(
+                    t, P(run["dp_axes"], None, None))
         elif run.get("decode_pin_dshard"):
-            pin = lambda t: jax.lax.with_sharding_constraint(
-                t, P(run["dp_axes"], None, "model"))
+            def pin(t):
+                return jax.lax.with_sharding_constraint(
+                    t, P(run["dp_axes"], None, "model"))
         else:
-            pin = lambda t: t
+            def pin(t):
+                return t
 
         def body(carry, xs):
             h = pin(carry)
@@ -446,7 +453,9 @@ class LM:
             h = B.xattn_block_apply(xp, cfg, h, kv_override=(xk, xv))
             return pin(h), (nk, nv)
 
-        group = lambda a: a.reshape((n_groups, every) + a.shape[1:])
+        def group(a):
+            return a.reshape((n_groups, every) + a.shape[1:])
+
         x, (nk, nv) = jax.lax.scan(
             group_body, x,
             (
@@ -486,7 +495,9 @@ class LM:
             )
             return h, (nst, new_kv["k"], new_kv["v"])
 
-        group = lambda a: a[:n_head].reshape((n_groups, every) + a.shape[1:])
+        def group(a):
+            return a[:n_head].reshape((n_groups, every) + a.shape[1:])
+
         x, (ns_head, sk, sv) = jax.lax.scan(
             group_body, x,
             (
@@ -501,7 +512,10 @@ class LM:
         if n_head == cfg.n_layers:
             nstates = ns_head
         else:
-            tail = lambda a: a[n_head:]
+
+            def tail(a):
+                return a[n_head:]
+
             x, ns_tail = jax.lax.scan(
                 mamba_body, x,
                 (jax.tree.map(tail, params["blocks"]),

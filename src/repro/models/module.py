@@ -21,7 +21,7 @@ them to concrete mesh axes at lower time.
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, NamedTuple, Sequence
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ for free (``jax.tree.map`` of the same NamedShardings).  Distributed tricks:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +47,9 @@ def cosine_schedule(cfg: AdamWConfig, step):
 
 
 def adamw_init(params):
-    zeros_like_f32 = lambda p: jnp.zeros(p.shape, F32)
+    def zeros_like_f32(p):
+        return jnp.zeros(p.shape, F32)
+
     return {
         "m": jax.tree.map(zeros_like_f32, params),
         "v": jax.tree.map(zeros_like_f32, params),

@@ -27,7 +27,7 @@ across replicas is preserved (same inputs → same quantized sum everywhere).
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

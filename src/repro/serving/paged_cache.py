@@ -30,7 +30,6 @@ from repro.core import WaitFreeGraph
 from repro.core.types import (
     OP_ADD_EDGE,
     OP_ADD_VERTEX,
-    OP_CONTAINS_EDGE,
     OP_REMOVE_VERTEX,
 )
 

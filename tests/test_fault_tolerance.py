@@ -6,7 +6,6 @@ The elastic (multi-device) cases run in a subprocess with
 process keeps seeing exactly one device.
 """
 
-import json
 import os
 import subprocess
 import sys
@@ -109,7 +108,8 @@ _ELASTIC_SCRIPT = textwrap.dedent("""
     wa = jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))
     store.save(3, {"w": wa})
 
-    for shape, axes in [((4, 1), ("data", "model")), ((1, 4), ("data", "model")), ((8,), ("data",))]:
+    for shape, axes in [((4, 1), ("data", "model")), ((1, 4), ("data", "model")),
+                        ((8,), ("data",))]:
         mesh_b = jax.make_mesh(shape, axes)
         sh = {"w": NamedSharding(mesh_b, P("data"))}
         out = store.restore(3, {"w": jax.ShapeDtypeStruct((8, 8), np.float32)},

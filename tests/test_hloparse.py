@@ -12,7 +12,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch import hloparse
 

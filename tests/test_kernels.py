@@ -5,6 +5,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import attention, mha_chunked, mha_reference
+from repro.kernels.frontier import frontier_expand, frontier_expand_reference
 from repro.kernels.hash_probe import hash_probe, hash_probe_reference
 from repro.kernels.paged_attention import paged_attention, paged_attention_reference
 from repro.kernels.ssd_scan import (
@@ -188,3 +189,18 @@ def test_hash_probe_sweep(cap, n):
     assert (f[: n - n // 2] >= 0).all()
     assert (f[n - n // 2:] == -1).all()
     assert (np.asarray(e_ref)[n - n // 2:] >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# frontier expansion (BFS level step; deep coverage in test_frontier_kernel.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,C,Ce", [(4, 64, 256), (8, 130, 1024), (16, 512, 4096)])
+def test_frontier_expand_sweep(S, C, Ce):
+    rng = np.random.default_rng(S * 131 + C * 7 + Ce)
+    frontier = jnp.asarray(rng.random((S, C)) < 0.2)
+    src = jnp.asarray(rng.integers(0, C, Ce).astype(np.int32))
+    dst = jnp.asarray(rng.integers(0, C, Ce).astype(np.int32))
+    ref = frontier_expand_reference(frontier, src, dst)
+    got = frontier_expand(frontier, src, dst, impl="kernel_interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))

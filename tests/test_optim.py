@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.optim.adamw import cosine_schedule, opt_pspecs

@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import LM
-from repro.serving import PagedKVManager, Request, ServingEngine
+from repro.serving import Request, ServingEngine
 
 
 @pytest.fixture(scope="module")

@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.data import DataConfig, SyntheticTokenStream
-from repro.launch.steps import build_decode_step, build_prefill_step, build_train_step
+from repro.launch.steps import build_prefill_step, build_train_step
 from repro.launch.train import TrainRunner
 from repro.models import LM
 from repro.models.config import ArchConfig
