@@ -15,13 +15,24 @@ Engine/impl columns:
                            with ``--kernels``, exercising the identical code
                            through the interpreter)
 
-Maintenance rows (engine ``maintenance``) time the snapshot refresh after
-each small update batch of an update-light query-heavy mix (the
-``query_heavy`` regime): ``rebuild`` pays a full ``build_csr`` per batch,
-``delta`` folds the batch in with ``traversal.apply_delta``.  ``snap_ms``
-is the mean refresh cost; ``us_per_query`` amortizes it over a 256-query
-window.  Delta below rebuild is the acceptance signal for incremental
-maintenance.
+Maintenance rows (engine ``maintenance``) time the two table-maintenance
+hot paths:
+
+* snapshot refresh after each small update batch of an update-light
+  query-heavy mix: ``rebuild`` pays a full ``build_csr`` per batch,
+  ``delta_host`` folds the batch with the numpy splice (O(valid edges)
+  lexsort + host round-trip), ``delta_device`` with the fused device
+  searchsorted merge (``repro.core.maintenance.delta_merge``).  The
+  ``batch`` column sweeps the update-batch size: the device fold's cost
+  should track the batch, not the live-edge count.
+* growth rehash (``rehash_host`` vs ``rehash_device``, ``batch`` = 0):
+  one capacity-doubling compaction of the current state, host claim
+  rounds vs the ``kernels/compact`` placement pipeline.
+
+``snap_ms`` is the mean refresh cost; ``us_per_query`` amortizes it over a
+256-query window.  Delta below rebuild (and device at or below host) is
+the acceptance signal.  The maintenance rows are also dumped to
+``BENCH_maintenance.json`` so the perf trajectory is recorded per run.
 
 Two costs are reported separately: ``snap_ms`` (snapshot compaction /
 refresh per graph version — amortized over every query until the next
@@ -40,6 +51,7 @@ Output: CSV rows on stdout (bench,engine,impl,build,graph_size,batch,...).
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 from typing import Dict, List
@@ -47,7 +59,7 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from repro.core import WaitFreeGraph, traversal
+from repro.core import WaitFreeGraph, maintenance, traversal
 from repro.core.workloads import (
     initial_vertices,
     sample_batch,
@@ -111,42 +123,78 @@ def _bench_oracle(g: WaitFreeGraph, pairs, timed: int):
 
 
 def _bench_maintenance(
-    key_space: int, mode: str, update_batch: int, n_batches: int, seed: int
+    key_space: int, mode: str, update_batch: int, n_batches: int, seed: int,
+    kernels: bool = False,
 ) -> Dict[str, float]:
-    """Mean snapshot-refresh ms per update batch, rebuild vs delta.
+    """Mean snapshot-refresh ms per update batch: rebuild vs host delta vs
+    device delta.
 
-    One graph, one update stream; after every applied batch both refresh
-    primitives are timed on the same post state — ``build_csr`` (what the
-    ``rebuild`` policy pays) and ``apply_delta`` from the previous snapshot
-    (what the ``delta`` policy pays; the result chains into the next round,
-    and tests assert it is bit-identical to the rebuild)."""
+    One graph, one update stream; after every applied batch all three
+    refresh primitives are timed on the same post state — ``build_csr``
+    (what the ``rebuild`` policy pays) and ``apply_delta`` from the previous
+    snapshot with the host splice and the device searchsorted merge (each
+    chains its own snapshot into the next round; tests assert both are
+    bit-identical to the rebuild)."""
     g = _build_graph(key_space, mode, seed)
     g.csr_maintenance = "rebuild"  # keep WaitFreeGraph out of the timings
     rng = np.random.default_rng(seed + 2)
     csr = traversal.build_csr(g.state)
     jax.block_until_ready(csr)
-    # warmup: compile the delta probe/splice and the rebuild for this shape
-    ops, us, vs = sample_update_batch(rng, update_batch, key_space)
-    g.apply(ops, us, vs)
-    jax.block_until_ready(traversal.build_csr(g.state))
-    csr = traversal.apply_delta(csr, g.state, ops, us, vs)
-    jax.block_until_ready(csr.src)
-    t_rebuild = t_delta = 0.0
+    # pass 1 — chain the folds once to (a) record each batch's (pre-CSR,
+    # post-state) pair and (b) warm every per-bucket compile the stream
+    # needs (touched-key buckets vary batch to batch; timing compiles would
+    # charge the device merge for one-time costs the steady state never
+    # pays again)
+    steps = []
     for _ in range(n_batches):
         ops, us, vs = sample_update_batch(rng, update_batch, key_space)
         g.apply(ops, us, vs)
+        steps.append((csr, g.state, ops, us, vs))
+        csr = traversal.apply_delta(csr, g.state, ops, us, vs, impl="host")
+    jax.block_until_ready(csr.src)
+    impls = [("delta_host", "host"), ("delta_device", "device")]
+    if kernels and jax.default_backend() != "tpu":
+        impls.append(("delta_device_interpret", "device_interpret"))
+    for pre, state, ops, us, vs in steps:
+        jax.block_until_ready(traversal.build_csr(state))
+        for _, impl in impls[1:]:
+            jax.block_until_ready(
+                traversal.apply_delta(pre, state, ops, us, vs, impl=impl).src
+            )
+    # pass 2 — steady-state timing over the identical work
+    timers = {"rebuild": 0.0, **{name: 0.0 for name, _ in impls}}
+    for pre, state, ops, us, vs in steps:
         t0 = time.perf_counter()
-        full = traversal.build_csr(g.state)
-        jax.block_until_ready(full)
-        t_rebuild += time.perf_counter() - t0
+        jax.block_until_ready(traversal.build_csr(state))
+        timers["rebuild"] += time.perf_counter() - t0
+        for name, impl in impls:
+            t0 = time.perf_counter()
+            out = traversal.apply_delta(pre, state, ops, us, vs, impl=impl)
+            jax.block_until_ready(out.src)
+            timers[name] += time.perf_counter() - t0
+    return {k: 1e3 * t / n_batches for k, t in timers.items()}
+
+
+def _bench_rehash(g: WaitFreeGraph, timed: int, kernels: bool = False) -> Dict[str, float]:
+    """Mean growth-rehash ms (one capacity doubling of the current state),
+    host claim rounds vs the device compaction pipeline (plus the Pallas
+    interpreter row with ``--kernels`` off-TPU, for the parity artifact)."""
+    state = g.state
+    nv, ne = 2 * state.v_capacity, 2 * state.e_capacity
+    impls = ["host", "device"]
+    if kernels and jax.default_backend() != "tpu":
+        impls.append("device_interpret")
+    out = {}
+    for impl in impls:
+        s, _, ok = maintenance.rehash(state, nv, ne, impl=impl)  # warmup/compile
+        assert ok
+        jax.block_until_ready(s.v_key)
         t0 = time.perf_counter()
-        csr = traversal.apply_delta(csr, g.state, ops, us, vs)
-        jax.block_until_ready(csr.src)
-        t_delta += time.perf_counter() - t0
-    return {
-        "rebuild": 1e3 * t_rebuild / n_batches,
-        "delta": 1e3 * t_delta / n_batches,
-    }
+        for _ in range(timed):
+            s, _, ok = maintenance.rehash(state, nv, ne, impl=impl)
+            jax.block_until_ready(s.v_key)
+        out[f"rehash_{impl}"] = 1e3 * (time.perf_counter() - t0) / timed
+    return out
 
 
 def run(
@@ -157,6 +205,7 @@ def run(
     seed: int = 0,
     kernels: bool = False,
     maint_batches: int = 8,
+    update_batches=(8, 32, 128),
 ) -> List[Dict]:
     impls = [("reference", "reference")]  # explicit: impl=None auto-picks the kernel on TPU
     if jax.default_backend() == "tpu":
@@ -193,14 +242,26 @@ def run(
                                  graph_size=key_space, batch=n,
                                  snap_ms=1e3 * snap_o,
                                  us_per_query=1e6 * dt_o / n))
-            # rebuild-vs-delta maintenance on the update-light mix
-            update_batch = 16
-            maint = _bench_maintenance(
-                key_space, mode, update_batch, maint_batches, seed
-            )
-            for policy, snap_ms in maint.items():
+            # rebuild-vs-delta maintenance on the update-light mix; the
+            # update-batch sweep exposes what each refresh scales with
+            # (the device merge should track batch size, the host splice
+            # and the rebuild the live-edge count / capacity)
+            for update_batch in update_batches:
+                maint = _bench_maintenance(
+                    key_space, mode, update_batch, maint_batches, seed,
+                    kernels=kernels,
+                )
+                for policy, snap_ms in maint.items():
+                    rows.append(dict(engine="maintenance", impl=policy, build=mode,
+                                     graph_size=key_space, batch=update_batch,
+                                     snap_ms=snap_ms,
+                                     us_per_query=1e3 * snap_ms / MAINT_QUERY_WINDOW))
+            # growth rehash: host claim rounds vs device compaction pipeline
+            for policy, snap_ms in _bench_rehash(
+                g, max(2, timed // 4), kernels=kernels
+            ).items():
                 rows.append(dict(engine="maintenance", impl=policy, build=mode,
-                                 graph_size=key_space, batch=update_batch,
+                                 graph_size=key_space, batch=0,
                                  snap_ms=snap_ms,
                                  us_per_query=1e3 * snap_ms / MAINT_QUERY_WINDOW))
     return rows
@@ -219,7 +280,8 @@ def main(argv=None):
         build_modes=("waitfree",) if quick else ("waitfree", "fpsp"),
         timed=2 if quick else 8,
         kernels=kernels,
-        maint_batches=8,
+        maint_batches=4 if quick else 8,
+        update_batches=(8, 64) if quick else (8, 32, 128),
     )
     print("bench,engine,impl,build,graph_size,batch,snap_ms,us_per_query")
     for r in rows:
@@ -228,6 +290,23 @@ def main(argv=None):
             f"{r['graph_size']},{r['batch']},{r['snap_ms']:.3f},"
             f"{r['us_per_query']:.2f}"
         )
+    # the maintenance trajectory, machine-readable (CI uploads it next to
+    # the CSV artifact)
+    maint_rows = [r for r in rows if r["engine"] == "maintenance"]
+    with open("BENCH_maintenance.json", "w") as f:
+        json.dump(
+            {
+                "bench": "graph_reachability/maintenance",
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "quick": quick,
+                "rows": maint_rows,
+            },
+            f,
+            indent=2,
+        )
+    print(f"# maintenance rows -> BENCH_maintenance.json ({len(maint_rows)} rows)",
+          file=sys.stderr)
     return rows
 
 

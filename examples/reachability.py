@@ -25,7 +25,10 @@ from repro.core.workloads import (
 KEY_SPACE = 64
 rng = np.random.default_rng(7)
 
-g = WaitFreeGraph(v_capacity=256, e_capacity=1024, mode="fpsp")
+# maintenance_impl="device" demos the compaction pipeline everywhere (the
+# auto default picks it only on TPU; on CPU the host oracle is faster)
+g = WaitFreeGraph(v_capacity=256, e_capacity=1024, mode="fpsp",
+                  maintenance_impl="device")
 oracle = SequentialGraph()
 ops, us, vs = initial_vertices(KEY_SPACE)  # the paper's pre-seeded vertices
 got = g.apply(ops, us, vs)
@@ -104,4 +107,24 @@ assert not g.reachable(hub, victim)
 assert g.get_path(hub, victim) is None
 print(f"after remove+re-add of {victim}: hub reaches "
       f"{len(g.bfs(hub))} vertices (stale edges carry no path)")
+
+# device-side state maintenance: the update folds above already ran through
+# the device delta-merge (this graph was built with an explicit
+# maintenance_impl="device" — the auto default picks it only on TPU); now
+# force a growth wave and let the rehash's snapshot-compact pre-seed the
+# next query
+pre_caps = (g.state.v_capacity, g.state.e_capacity)
+ops, us, vs = initial_vertices(4 * KEY_SPACE)  # overflows the tables
+got = g.apply(ops, us, vs)
+exp_res, oracle = run_sequential(ops, us, vs, graph=oracle)
+assert got.tolist() == exp_res
+assert (g.state.v_capacity, g.state.e_capacity) != pre_caps
+assert g.snapshot() == (oracle.vertices, oracle.edges)
+grown_csr = g.traversal_csr()  # one delta fold off the rehash's own CSR
+assert all(
+    np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(grown_csr, build_csr(g.state))
+)
+print(f"growth {pre_caps} -> {(g.state.v_capacity, g.state.e_capacity)}: "
+      f"device rehash + snapshot-compact, post-growth snapshot exact")
 print("all traversal answers match the sequential oracle")

@@ -9,8 +9,12 @@ Public API:
   * :mod:`repro.core.oracle` — sequential specification (ground truth).
   * :mod:`repro.core.traversal` — batched wait-free reachability/BFS/k-hop
     over compacted consistent snapshots (CSR), linearized at batch boundaries.
+  * :mod:`repro.core.maintenance` — device-resident state maintenance:
+    growth rehash (live-compact + snapshot-compact) and the CSR delta-merge,
+    built on the :mod:`repro.kernels.compact` sort + prefix-sum primitives.
 """
 
+from . import maintenance
 from .graph import WaitFreeGraph
 from .oracle import SequentialGraph, run_sequential
 from .traversal import (
@@ -40,6 +44,7 @@ from .types import (
 
 __all__ = [
     "WaitFreeGraph",
+    "maintenance",
     "SequentialGraph",
     "run_sequential",
     "TraversalCSR",

@@ -24,9 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import engine, fastpath, traversal
+from . import engine, fastpath, maintenance, traversal
 from .types import (
-    ABSENT_INC,
     EMPTY_KEY,
     GROW_LOAD_FACTOR,
     OP_ADD_EDGE,
@@ -52,100 +51,39 @@ def _live_counts(state: GraphState):
     return v, e, v_used, e_used
 
 
-def _rehash(state: GraphState, new_vcap: int, new_ecap: int) -> GraphState:
-    """Grow + compact: keep live vertices (with incarnations) and valid live
-    edges only — the batched analogue of Harris physical deletion."""
-    # Host-side (numpy) rehash: growth is rare and amortized; keeping it off
-    # the jit path avoids a fresh compile per capacity pair.
-    v_key = np.asarray(state.v_key)
-    v_live = np.asarray(state.v_live)
-    v_inc = np.asarray(state.v_inc)
-    e_ku = np.asarray(state.e_key_u)
-    e_kv = np.asarray(state.e_key_v)
-    e_live = np.asarray(state.e_live)
-    e_bu = np.asarray(state.e_inc_u)
-    e_bv = np.asarray(state.e_inc_v)
-
-    n_vkey = np.full(new_vcap, EMPTY_KEY, np.int32)
-    n_vlive = np.zeros(new_vcap, bool)
-    n_vinc = np.full(new_vcap, ABSENT_INC, np.int32)
-
-    # live vertices only: tombstone incarnations are safe to drop because the
-    # edge filter below drops every edge not bound to a live endpoint's
-    # current incarnation.
-    cur_inc = {}
-
-    def mix(x):
-        # host-side replica of hashing._mix32 (MurmurHash3 finalizer)
-        x = int(x) & 0xFFFFFFFF
-        x ^= x >> 16
-        x = (x * 0x85EBCA6B) & 0xFFFFFFFF
-        x ^= x >> 13
-        x = (x * 0xC2B2AE35) & 0xFFFFFFFF
-        x ^= x >> 16
-        return x
-
-    def vhome(k, cap):
-        return mix(k) & (cap - 1)
-
-    def ehome(u, v, cap):
-        h = mix(((int(u) & 0xFFFFFFFF) * 0x9E3779B9 + mix(v)) & 0xFFFFFFFF)
-        return h & (cap - 1)
-
-    def insert(keycol, home, payload_write):
-        cap = keycol.shape[0]
-        step = 0
-        while True:
-            s = (home + step * (step + 1) // 2) & (cap - 1)
-            if keycol[s] == EMPTY_KEY:
-                payload_write(s)
-                return
-            step += 1
-
-    for i in np.nonzero(v_live)[0]:
-        k = int(v_key[i])
-        cur_inc[k] = int(v_inc[i])
-
-        def write(s, k=k, i=i):
-            n_vkey[s] = k
-            n_vlive[s] = True
-            n_vinc[s] = v_inc[i]
-
-        insert(n_vkey, vhome(k, new_vcap), write)
-
-    n_eku = np.full(new_ecap, EMPTY_KEY, np.int32)
-    n_ekv = np.full(new_ecap, EMPTY_KEY, np.int32)
-    n_elive = np.zeros(new_ecap, bool)
-    n_ebu = np.full(new_ecap, ABSENT_INC, np.int32)
-    n_ebv = np.full(new_ecap, ABSENT_INC, np.int32)
-
-    for i in np.nonzero(e_live)[0]:
-        u, v = int(e_ku[i]), int(e_kv[i])
-        valid = (
-            cur_inc.get(u, None) == int(e_bu[i]) and cur_inc.get(v, None) == int(e_bv[i])
+def _rehash_escalating(
+    state: GraphState,
+    new_vcap: int,
+    new_ecap: int,
+    impl: Optional[str] = None,
+    with_csr: bool = False,
+):
+    """The grow-and-retry discipline shared by :func:`_rehash` and
+    ``WaitFreeGraph._grow``: placement is bounded by the engines' own
+    ``MAX_PROBES``, so should a chain overflow it (a key the engines could
+    never locate again), the capacities double and the compaction retries.
+    Returns ``(new_state, csr_or_None)``."""
+    for _ in range(_MAX_GROW_ATTEMPTS):
+        new_state, csr, ok = maintenance.rehash(
+            state, new_vcap, new_ecap, impl=impl, with_csr=with_csr
         )
-        if not valid:
-            continue  # stale edge: physical deletion
+        if ok:
+            return new_state, csr
+        new_vcap *= 2
+        new_ecap *= 2
+    raise RuntimeError("rehash placement did not converge")
 
-        def write(s, i=i, u=u, v=v):
-            n_eku[s] = u
-            n_ekv[s] = v
-            n_elive[s] = True
-            n_ebu[s] = e_bu[i]
-            n_ebv[s] = e_bv[i]
 
-        insert(n_eku, ehome(u, v, new_ecap), write)
+def _rehash(
+    state: GraphState, new_vcap: int, new_ecap: int, impl: Optional[str] = None
+) -> GraphState:
+    """Grow + compact: keep live vertices (with incarnations) and valid live
+    edges only — the batched analogue of Harris physical deletion.
 
-    return GraphState(
-        v_key=jnp.asarray(n_vkey),
-        v_live=jnp.asarray(n_vlive),
-        v_inc=jnp.asarray(n_vinc),
-        e_key_u=jnp.asarray(n_eku),
-        e_key_v=jnp.asarray(n_ekv),
-        e_live=jnp.asarray(n_elive),
-        e_inc_u=jnp.asarray(n_ebu),
-        e_inc_v=jnp.asarray(n_ebv),
-    )
+    Stable entry point over :func:`repro.core.maintenance.rehash` (which
+    owns the host/device implementations), with capacity escalation on
+    placement overflow."""
+    return _rehash_escalating(state, new_vcap, new_ecap, impl)[0]
 
 
 class WaitFreeGraph:
@@ -166,6 +104,16 @@ class WaitFreeGraph:
     :func:`repro.core.traversal.apply_delta` (bit-identical to a rebuild,
     O(batch) instead of O(capacity) — the win for update-light query-heavy
     mixes), ``"rebuild"`` discards it and recompacts lazily on next query.
+
+    ``maintenance_impl`` selects where table maintenance (growth rehash and
+    the ``apply_delta`` splice) runs: ``"device"`` routes both through
+    :mod:`repro.core.maintenance` (the :mod:`repro.kernels.compact`
+    sort + prefix-sum pipeline; a growth rehash also pre-compacts the
+    traversal snapshot so the post-growth ``build_csr`` is one delta fold),
+    ``"device_interpret"`` forces the Pallas kernels through the
+    interpreter, ``"host"`` keeps the vectorized-numpy oracle.  ``None`` =
+    auto: device on TPU, host elsewhere.  All impls produce bit-identical
+    tables, so the flag is purely a performance knob.
     """
 
     def __init__(
@@ -175,14 +123,18 @@ class WaitFreeGraph:
         mode: str = "waitfree",
         traversal_impl: Optional[str] = None,
         csr_maintenance: str = "delta",
+        maintenance_impl: Optional[str] = None,
     ):
         assert mode in ("waitfree", "fpsp")
         assert csr_maintenance in ("delta", "rebuild")
+        assert maintenance_impl in maintenance.MAINTENANCE_IMPLS
         self._csr: Optional[traversal.TraversalCSR] = None  # cached snapshot
+        self._grow_csr: Optional[traversal.TraversalCSR] = None
         self.state = make_state(v_capacity, e_capacity)
         self.mode = mode
         self.traversal_impl = traversal_impl
         self.csr_maintenance = csr_maintenance
+        self.maintenance_impl = maintenance_impl
         self._phase = 0  # the paper's maxPhase counter
 
     @property
@@ -240,16 +192,29 @@ class WaitFreeGraph:
         self._phase += batch.size
         apply_fn = engine.apply_batch if self.mode == "waitfree" else fastpath.apply_batch_fpsp
 
+        self._grow_csr = None
         for attempt in range(_MAX_GROW_ATTEMPTS):
             # keep the pre-state alive for transactional retry
             pre = self.state
             res = apply_fn(pre, batch)
             if bool(res.ok) and not self._needs_growth(res.state):
+                grow_csr = self._grow_csr
                 self.state = res.state
                 if attempt > 0:
                     # growth rehashed the tables: every slot moved, so both
                     # the saved snapshot's and the queue's bases are void —
-                    # the state setter already dropped them; recompact lazily
+                    # the state setter already dropped them.  The rehash
+                    # pre-compacted the grown state's snapshot, though
+                    # (maintenance "snapshot-compact"): queue this batch
+                    # against it so the next query pays one delta fold, not
+                    # a full rebuild.
+                    if (
+                        mutating
+                        and grow_csr is not None
+                        and self.csr_maintenance == "delta"
+                    ):
+                        self._delta_base = grow_csr
+                        self._delta_batches = [(ops0, us0, vs0)]
                     return np.asarray(res.success)[:n]
                 if not mutating:
                     # abstractly identical pre/post state: the saved snapshot
@@ -293,7 +258,16 @@ class WaitFreeGraph:
         if new_vcap == state.v_capacity and new_ecap == state.e_capacity:
             new_vcap *= 2
             new_ecap *= 2
-        return _rehash(state, new_vcap, new_ecap)
+        impl = maintenance.resolve_impl(self.maintenance_impl)
+        # snapshot-compact rides the device pass nearly free; on the host it
+        # would be an eager build_csr per grow attempt — leave that lazy
+        with_csr = impl != "host" and self.csr_maintenance == "delta"
+        new_state, csr = _rehash_escalating(state, new_vcap, new_ecap, impl, with_csr)
+        # stashed for apply(): becomes the delta base of the retried batch
+        # (the state setter must not clear it — the grown state is installed
+        # right after this returns)
+        self._grow_csr = csr
+        return new_state
 
     # -- the paper's six-operation convenience API -------------------------
     def add_vertex(self, u: int) -> bool:
@@ -338,6 +312,7 @@ class WaitFreeGraph:
                     np.concatenate([b[0] for b in self._delta_batches]),
                     np.concatenate([b[1] for b in self._delta_batches]),
                     np.concatenate([b[2] for b in self._delta_batches]),
+                    impl=self.maintenance_impl,
                 )
             else:
                 self._csr = traversal.build_csr(self.state)

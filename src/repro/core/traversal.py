@@ -176,18 +176,30 @@ def _pad_pow2(a: np.ndarray, fill: int, floor: int = 16) -> np.ndarray:
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("nv", "ne"))
-def _delta_probe(state: GraphState, pack: jnp.ndarray, nv: int, ne: int):
-    """One device pass resolving everything `apply_delta` needs about the
-    touched keys against the *post* state: vertex slots + liveness +
-    incarnations, edge lanes + endpoint slots + validity, and the new live
-    count.  O(batch) probes instead of `build_csr`'s O(capacity).  The
-    touched keys arrive as one packed i32 buffer (vkeys | e_us | e_vs, each
-    padded to a power-of-two bucket) — a single host-to-device transfer;
-    per-array device_puts were the dominant cost of the delta path on CPU."""
-    vkeys = pack[:nv]
-    eus = pack[nv:nv + ne]
-    evs = pack[nv + ne:]
+class DeltaProbe(NamedTuple):
+    """Everything a delta fold needs to know about the touched keys, as
+    resolved against the *post* state (all device arrays)."""
+
+    v_found: jnp.ndarray     # bool[nv] — touched vertex key present (live or tomb)
+    v_slot: jnp.ndarray      # i32[nv]
+    v_live_now: jnp.ndarray  # bool[nv]
+    v_inc_now: jnp.ndarray   # i32[nv]
+    e_found: jnp.ndarray     # bool[ne] — touched edge key has a table lane
+    e_lane: jnp.ndarray      # i32[ne]
+    e_valid: jnp.ndarray     # bool[ne] — lane live + incarnation-valid now
+    e_su: jnp.ndarray        # i32[ne] — endpoint slots (where e_found)
+    e_sv: jnp.ndarray        # i32[ne]
+    n_live: jnp.ndarray      # i32[] — post-state live vertex count
+
+
+def _delta_probe_parts(
+    state: GraphState, vkeys: jnp.ndarray, eus: jnp.ndarray, evs: jnp.ndarray
+) -> DeltaProbe:
+    """Resolve the touched keys against the post state: vertex slots +
+    liveness + incarnations, edge lanes + endpoint slots + validity, and the
+    new live count.  O(batch) probes instead of ``build_csr``'s O(capacity).
+    Shared by the packed host transfer (:func:`_delta_probe`) and the fused
+    device merge (:func:`repro.core.maintenance.delta_merge`)."""
     vloc = locate_vertices(state.v_key, vkeys, vkeys != EMPTY_KEY)
     v_safe = jnp.where(vloc.found, vloc.slot, 0)
 
@@ -208,22 +220,44 @@ def _delta_probe(state: GraphState, pack: jnp.ndarray, nv: int, ne: int):
         & (state.v_inc[su] == state.e_inc_u[e_safe])
         & (state.v_inc[sv] == state.e_inc_v[e_safe])
     )
+    return DeltaProbe(
+        v_found=vloc.found,
+        v_slot=v_safe.astype(jnp.int32),
+        v_live_now=state.v_live[v_safe],
+        v_inc_now=state.v_inc[v_safe],
+        e_found=eloc.found,
+        e_lane=e_safe.astype(jnp.int32),
+        e_valid=e_valid,
+        e_su=su.astype(jnp.int32),
+        e_sv=sv.astype(jnp.int32),
+        n_live=jnp.sum(state.v_live).astype(jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("nv", "ne"))
+def _delta_probe(state: GraphState, pack: jnp.ndarray, nv: int, ne: int):
+    """Packed-transfer wrapper around :func:`_delta_probe_parts` for the host
+    splice path.  The touched keys arrive as one packed i32 buffer
+    (vkeys | e_us | e_vs, each padded to a power-of-two bucket) — a single
+    host-to-device transfer; per-array device_puts were the dominant cost of
+    the delta path on CPU."""
+    p = _delta_probe_parts(state, pack[:nv], pack[nv:nv + ne], pack[nv + ne:])
     # one packed i32 result (bools widened) = one device-to-host transfer;
     # n_live stays a device scalar — it goes straight back into the CSR
     out = jnp.concatenate(
         [
-            vloc.found.astype(jnp.int32),
-            v_safe.astype(jnp.int32),
-            state.v_live[v_safe].astype(jnp.int32),
-            state.v_inc[v_safe],
-            eloc.found.astype(jnp.int32),
-            e_safe.astype(jnp.int32),
-            e_valid.astype(jnp.int32),
-            su.astype(jnp.int32),
-            sv.astype(jnp.int32),
+            p.v_found.astype(jnp.int32),
+            p.v_slot,
+            p.v_live_now.astype(jnp.int32),
+            p.v_inc_now,
+            p.e_found.astype(jnp.int32),
+            p.e_lane,
+            p.e_valid.astype(jnp.int32),
+            p.e_su,
+            p.e_sv,
         ]
     )
-    return out, jnp.sum(state.v_live).astype(jnp.int32)
+    return out, p.n_live
 
 
 @functools.partial(jax.jit, static_argnames=("ce", "cv"))
@@ -249,6 +283,7 @@ def apply_delta(
     vs=None,
     *,
     max_delta_frac: float = 0.25,
+    impl: Optional[str] = None,
 ) -> TraversalCSR:
     """Fold one applied update batch into an existing snapshot.
 
@@ -256,16 +291,23 @@ def apply_delta(
     post-batch state the engine returned for ``(ops, us, vs)``.  The result
     is **bit-identical** to ``build_csr(state)`` — same sorted edge arrays,
     same lane provenance, same offsets.  The probe side is O(batch) (one
-    jitted locate over the touched keys instead of the whole table); the
-    splice side still walks the surviving edge list on the host — array
-    transfers, mask updates, and a lexsort over the valid lanes — so the
-    refresh is O(valid edges) with small vectorized-numpy constants, versus
-    the rebuild's O(capacity) bounded-probe relocate + full-table sort on
-    device.  Measured 2.5–7× cheaper on CPU for 16-op batches (growing with
-    capacity; see the maintenance rows of ``benchmarks/graph_reachability``)
-    — that is what amortizes ``snap_ms`` for update-light query-heavy
-    mixes.  A true O(batch) splice (searchsorted merge into the surviving
-    runs, device-side) is a noted follow-up in ROADMAP.md.
+    jitted locate over the touched keys instead of the whole table).
+
+    ``impl`` picks the splice side (``None`` = auto: device on TPU, host
+    elsewhere — ``maintenance.resolve_impl``):
+
+    * ``"device"`` / ``"device_interpret"`` — the whole fold is one fused
+      jitted pass (:func:`repro.core.maintenance.delta_merge`): prefix-sum
+      compaction of the surviving lanes, a sort of the O(batch) delta
+      (bucketed shapes, so it compiles once per bucket), and a device-side
+      ``searchsorted`` merge into the surviving runs.  One host-to-device
+      transfer (the packed touched keys), zero transfers back — the host
+      lexsort round-trip this path replaces was the dominant refresh cost.
+    * ``"host"`` — the numpy splice: mask updates and a lexsort over the
+      surviving lanes on the host (O(valid edges) with small vectorized
+      constants).  Kept as the oracle the device merge is tested
+      bit-identical against, and as the fallback when the composite merge
+      keys would overflow int32 (``maintenance.merge_keys_fit``).
 
     Falls back to :func:`build_csr` automatically when
 
@@ -303,6 +345,21 @@ def apply_delta(
     eu_pad = _pad_pow2(e_tu, int(EMPTY_KEY))
     ev_pad = _pad_pow2(e_tv, 0)
     nvp, nep = v_pad.shape[0], eu_pad.shape[0]
+
+    from . import maintenance  # deferred: maintenance imports this module
+
+    if maintenance.resolve_impl(impl) != "host":
+        if maintenance.merge_keys_fit(csr.v_capacity, ce):
+            return maintenance.delta_merge(
+                csr,
+                state,
+                np.concatenate([v_pad, eu_pad, ev_pad]),
+                nvp,
+                nep,
+                impl=impl,
+            )
+        # composite merge keys would overflow int32: host splice below
+
     packed, n_live = _delta_probe(
         state, np.concatenate([v_pad, eu_pad, ev_pad]), nvp, nep
     )

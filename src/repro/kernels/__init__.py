@@ -11,4 +11,7 @@ Kernels:
   * ``paged_attention`` — decode over wfgraph-managed block tables.
   * ``ssd_scan``        — Mamba-2 / RWKV-6 recurrence, VMEM-resident state.
   * ``hash_probe``      — graph-engine locate (VMEM-resident table).
+  * ``frontier``        — BFS frontier expansion (gather + scatter-min).
+  * ``compact``         — state-maintenance compaction (prefix-sum stream
+    compaction + claim-round quadratic-probe placement).
 """

@@ -1,0 +1,10 @@
+from .ops import masked_compact, probe_place
+from .ref import masked_compact_reference, probe_place_reference, probe_place_rounds
+
+__all__ = [
+    "masked_compact",
+    "probe_place",
+    "masked_compact_reference",
+    "probe_place_reference",
+    "probe_place_rounds",
+]

@@ -1,0 +1,65 @@
+"""Public entry points for the compaction primitives.
+
+Dispatch mirrors ``repro.kernels.frontier``: the Pallas kernel on TPU, the
+pure-jnp reference elsewhere.  ``REPRO_COMPACT_IMPL`` overrides the default
+(CI's ``kernels-interpret`` job sets it to ``kernel_interpret`` so the
+interpreter path is forced on CPU).  All impls are bit-identical; callers
+that need a *host* (numpy) oracle use ``repro.core.maintenance`` instead.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+
+def _resolve(impl: str | None) -> str:
+    return (
+        impl
+        or os.environ.get("REPRO_COMPACT_IMPL")
+        or ("kernel" if jax.default_backend() == "tpu" else "reference")
+    )
+
+
+def masked_compact(
+    values: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    fill: int,
+    impl: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    impl = _resolve(impl)
+    if impl == "kernel":
+        return _kernel.masked_compact(values, mask, fill=fill)
+    if impl == "kernel_interpret":
+        return _kernel.masked_compact(values, mask, fill=fill, interpret=True)
+    if impl == "reference":
+        return _ref.masked_compact_reference(values, mask, fill=fill)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def probe_place(
+    home: jnp.ndarray,
+    active: jnp.ndarray,
+    *,
+    capacity: int,
+    max_probes: int,
+    impl: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    impl = _resolve(impl)
+    if impl == "kernel":
+        return _kernel.probe_place(home, active, capacity=capacity, max_probes=max_probes)
+    if impl == "kernel_interpret":
+        return _kernel.probe_place(
+            home, active, capacity=capacity, max_probes=max_probes, interpret=True
+        )
+    if impl == "reference":
+        return _ref.probe_place_reference(
+            home, active, capacity=capacity, max_probes=max_probes
+        )
+    raise ValueError(f"unknown impl {impl!r}")

@@ -4,6 +4,12 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
+from repro.kernels.compact import (
+    masked_compact,
+    masked_compact_reference,
+    probe_place,
+    probe_place_reference,
+)
 from repro.kernels.flash_attention import attention, mha_chunked, mha_reference
 from repro.kernels.frontier import frontier_expand, frontier_expand_reference
 from repro.kernels.hash_probe import hash_probe, hash_probe_reference
@@ -204,3 +210,83 @@ def test_frontier_expand_sweep(S, C, Ce):
     ref = frontier_expand_reference(frontier, src, dst)
     got = frontier_expand(frontier, src, dst, impl="kernel_interpret")
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# compaction primitives (state maintenance; deep coverage in
+# test_maintenance.py — these sweep the raw kernels vs the jnp references)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,N,density", [(1, 64, 0.5), (3, 1000, 0.2), (6, 4096, 0.8)])
+def test_masked_compact_sweep(R, N, density):
+    rng = np.random.default_rng(R * 17 + N)
+    vals = jnp.asarray(rng.integers(-5, 1000, (R, N)).astype(np.int32))
+    mask = jnp.asarray(rng.random(N) < density)
+    ref, n_ref = masked_compact_reference(vals, mask, fill=-1)
+    got, n_got = masked_compact(vals, mask, fill=-1, impl="kernel_interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert int(n_got) == int(n_ref) == int(np.asarray(mask).sum())
+    # semantic: survivors in lane order, fill tail
+    np.testing.assert_array_equal(
+        np.asarray(ref)[:, : int(n_ref)], np.asarray(vals)[:, np.asarray(mask)]
+    )
+    assert (np.asarray(ref)[:, int(n_ref):] == -1).all()
+
+
+@pytest.mark.parametrize("cap,n,max_probes", [(64, 16, 32), (256, 100, 32), (1024, 500, 32)])
+def test_probe_place_sweep(cap, n, max_probes):
+    from repro.core.hashing import hash_vertex
+
+    rng = np.random.default_rng(cap + n)
+    keys = jnp.asarray(rng.choice(100_000, n, replace=False).astype(np.int32))
+    home = hash_vertex(keys, cap)
+    active = jnp.asarray(rng.random(n) < 0.9)
+    s_ref, o_ref = probe_place_reference(home, active, capacity=cap, max_probes=max_probes)
+    s_got, o_got = probe_place(
+        home, active, capacity=cap, max_probes=max_probes, impl="kernel_interpret"
+    )
+    np.testing.assert_array_equal(np.asarray(s_got), np.asarray(s_ref))
+    assert bool(o_got) == bool(o_ref) is False
+    s = np.asarray(s_ref)
+    a = np.asarray(active)
+    assert (s[~a] == -1).all() and (s[a] >= 0).all()
+    assert len(set(s[a].tolist())) == int(a.sum())  # distinct slots
+    # wait-free locate invariant: no empty slot strictly earlier on a
+    # placed key's own probe chain (else the engines' locate would stop
+    # at the gap and miss the key)
+    occ = np.zeros(cap, bool)
+    occ[s[a]] = True
+    hm = np.asarray(home)
+    for i in np.flatnonzero(a):
+        for step in range(max_probes):
+            slot = (hm[i] + step * (step + 1) // 2) & (cap - 1)
+            if slot == s[i]:
+                break
+            assert occ[slot], (i, step)
+
+
+def test_probe_slot_replica_pins_hashing():
+    """compact.ref keeps a local probe_slot replica (kernel families are
+    import-free of repro.core); it must stay bit-identical to the real one."""
+    from repro.core.hashing import probe_slot
+    from repro.kernels.compact.ref import _probe_slot
+
+    home = jnp.asarray(np.arange(0, 512, 7, dtype=np.int32) % 256)
+    for step in (0, 1, 5, 31):
+        np.testing.assert_array_equal(
+            np.asarray(_probe_slot(home, jnp.int32(step), 256)),
+            np.asarray(probe_slot(home, jnp.int32(step), 256)),
+        )
+
+
+def test_probe_place_overflow_is_flagged():
+    """Chains capped below what placement needs: both impls agree on the
+    overflow verdict (the signal that makes the caller grow further)."""
+    from repro.core.hashing import hash_vertex
+
+    keys = jnp.asarray(np.arange(40, dtype=np.int32))
+    home = hash_vertex(keys, 32)
+    active = jnp.ones(40, bool)
+    _, o_ref = probe_place_reference(home, active, capacity=32, max_probes=2)
+    _, o_got = probe_place(home, active, capacity=32, max_probes=2, impl="kernel_interpret")
+    assert bool(o_ref) and bool(o_got)
