@@ -45,8 +45,17 @@ engine's numbers; the machine-independent content is the *scaling* in batch
 size (the whole query batch rides one dispatch), the one-dispatch snapshot
 cost, and the rebuild-vs-delta ratio.
 
+The ``n_shards`` column reports the hash-prefix shard count of the graph
+the row was measured on (``repro.core.sharding``).  Query rows sweep it —
+the batched engine answers against the *fused* cross-shard snapshot, and
+all shard counts must agree bit-for-bit (asserted).  Maintenance and rehash
+rows carry ``n_shards=1``: the refresh/rehash primitives are per-shard by
+construction (a sharded graph runs the same primitive once per shard), so
+the single-shard number *is* the per-shard cost.  See the README
+"Benchmarks" section for how to read the CSV and ``BENCH_maintenance.json``.
+
 Usage:  python benchmarks/graph_reachability.py [--quick] [--kernels]
-Output: CSV rows on stdout (bench,engine,impl,build,graph_size,batch,...).
+Output: CSV rows on stdout (bench,engine,impl,build,graph_size,batch,n_shards,...).
 """
 
 from __future__ import annotations
@@ -59,7 +68,7 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from repro.core import WaitFreeGraph, maintenance, traversal
+from repro.core import WaitFreeGraph, maintenance, sharding, traversal
 from repro.core.workloads import (
     initial_vertices,
     sample_batch,
@@ -73,11 +82,16 @@ ORACLE_MAX_BATCH = 128  # python BFS per query; cap its sweep and say so
 MAINT_QUERY_WINDOW = 256  # queries amortizing each maintenance refresh
 
 
-def _build_graph(key_space: int, mode: str, seed: int = 0) -> WaitFreeGraph:
+def _build_graph(
+    key_space: int, mode: str, seed: int = 0, n_shards: int = 1
+) -> WaitFreeGraph:
     """Pre-seeded vertices (the paper's initial graph) + traversal-mix
     traffic, so AddE lands on live endpoints and real path structure forms."""
     rng = np.random.default_rng(seed)
-    g = WaitFreeGraph(v_capacity=4 * key_space, e_capacity=16 * key_space, mode=mode)
+    g = WaitFreeGraph(
+        v_capacity=4 * key_space, e_capacity=16 * key_space, mode=mode,
+        n_shards=n_shards,
+    )
     g.apply(*initial_vertices(key_space))
     for _ in range(4):
         ops, us, vs = sample_batch(rng, key_space // 2, "traversal", key_space=key_space)
@@ -85,12 +99,20 @@ def _build_graph(key_space: int, mode: str, seed: int = 0) -> WaitFreeGraph:
     return g
 
 
+def _snap_csr(g: WaitFreeGraph):
+    """The full snapshot-compaction pass: build_csr for a 1-shard graph,
+    per-shard builds + cross-shard fusion for a sharded one."""
+    if g.n_shards == 1:
+        return traversal.build_csr(g.state)
+    return sharding.fuse_csrs([traversal.build_csr(st) for st in g.shards])
+
+
 def _bench_snap(g: WaitFreeGraph):
     """One-time CSR compaction cost — impl-independent, measured once per
     graph build and shared across the impl rows."""
-    jax.block_until_ready(traversal.build_csr(g.state))  # warmup / compile
+    jax.block_until_ready(_snap_csr(g))  # warmup / compile
     t0 = time.perf_counter()
-    csr = traversal.build_csr(g.state)
+    csr = _snap_csr(g)
     jax.block_until_ready(csr)
     return time.perf_counter() - t0, csr
 
@@ -206,6 +228,7 @@ def run(
     kernels: bool = False,
     maint_batches: int = 8,
     update_batches=(8, 32, 128),
+    shard_counts=(1, 4),
 ) -> List[Dict]:
     impls = [("reference", "reference")]  # explicit: impl=None auto-picks the kernel on TPU
     if jax.default_backend() == "tpu":
@@ -215,37 +238,52 @@ def run(
     rows = []
     for key_space in graph_sizes:
         for mode in build_modes:
-            g = _build_graph(key_space, mode, seed)
-            rng = np.random.default_rng(seed + 1)
-            snap_b, csr = _bench_snap(g)
-            for n in batches:
-                pairs = sample_query_pairs(rng, n, key_space)
-                ref_out = None
-                for impl_name, impl in impls:
-                    dt_b, out_b = _bench_batched(csr, pairs, timed, impl)
-                    rows.append(dict(engine="batched", impl=impl_name, build=mode,
+            # query rows sweep the shard count: same seed -> same op stream
+            # and same query pairs, so the fused-snapshot answers must agree
+            # bit-for-bit with the 1-shard graph's (asserted below)
+            shard_ref: Dict[int, List] = {}
+            for n_shards in shard_counts:
+                g = _build_graph(key_space, mode, seed, n_shards)
+                rng = np.random.default_rng(seed + 1)
+                snap_b, csr = _bench_snap(g)
+                for n in batches:
+                    pairs = sample_query_pairs(rng, n, key_space)
+                    ref_out = None
+                    for impl_name, impl in impls:
+                        dt_b, out_b = _bench_batched(csr, pairs, timed, impl)
+                        rows.append(dict(engine="batched", impl=impl_name, build=mode,
+                                         graph_size=key_space, batch=n,
+                                         n_shards=n_shards,
+                                         snap_ms=1e3 * snap_b,
+                                         us_per_query=1e6 * dt_b / n))
+                        if ref_out is None:
+                            ref_out = out_b
+                        else:
+                            assert out_b.tolist() == ref_out.tolist(), "impls disagree"
+                    cross = shard_ref.setdefault(n, ref_out.tolist())
+                    assert ref_out.tolist() == cross, "shard counts disagree"
+                    if n_shards != shard_counts[0]:
+                        continue  # oracle ground truth once per (mode, batch)
+                    if n > ORACLE_MAX_BATCH:
+                        # stderr: stdout is the documented CSV contract
+                        print(f"# dropped: oracle @ batch {n} (python BFS per "
+                              f"query; capped at {ORACLE_MAX_BATCH})",
+                              file=sys.stderr)
+                        continue
+                    dt_o, snap_o, out_o = _bench_oracle(g, pairs, max(1, timed // 4))
+                    assert ref_out.tolist() == out_o.tolist(), "engines disagree"
+                    rows.append(dict(engine="oracle", impl="python", build=mode,
                                      graph_size=key_space, batch=n,
-                                     snap_ms=1e3 * snap_b,
-                                     us_per_query=1e6 * dt_b / n))
-                    if ref_out is None:
-                        ref_out = out_b
-                    else:
-                        assert out_b.tolist() == ref_out.tolist(), "impls disagree"
-                if n > ORACLE_MAX_BATCH:
-                    # stderr: stdout is the documented CSV contract
-                    print(f"# dropped: oracle @ batch {n} (python BFS per query; "
-                          f"capped at {ORACLE_MAX_BATCH})", file=sys.stderr)
-                    continue
-                dt_o, snap_o, out_o = _bench_oracle(g, pairs, max(1, timed // 4))
-                assert ref_out.tolist() == out_o.tolist(), "engines disagree"
-                rows.append(dict(engine="oracle", impl="python", build=mode,
-                                 graph_size=key_space, batch=n,
-                                 snap_ms=1e3 * snap_o,
-                                 us_per_query=1e6 * dt_o / n))
+                                     n_shards=n_shards,
+                                     snap_ms=1e3 * snap_o,
+                                     us_per_query=1e6 * dt_o / n))
             # rebuild-vs-delta maintenance on the update-light mix; the
             # update-batch sweep exposes what each refresh scales with
             # (the device merge should track batch size, the host splice
-            # and the rebuild the live-edge count / capacity)
+            # and the rebuild the live-edge count / capacity).  n_shards=1:
+            # the refresh primitives are per-shard by construction, so the
+            # single-shard number is the per-shard cost.
+            g = _build_graph(key_space, mode, seed)
             for update_batch in update_batches:
                 maint = _bench_maintenance(
                     key_space, mode, update_batch, maint_batches, seed,
@@ -254,6 +292,7 @@ def run(
                 for policy, snap_ms in maint.items():
                     rows.append(dict(engine="maintenance", impl=policy, build=mode,
                                      graph_size=key_space, batch=update_batch,
+                                     n_shards=1,
                                      snap_ms=snap_ms,
                                      us_per_query=1e3 * snap_ms / MAINT_QUERY_WINDOW))
             # growth rehash: host claim rounds vs device compaction pipeline
@@ -262,6 +301,7 @@ def run(
             ).items():
                 rows.append(dict(engine="maintenance", impl=policy, build=mode,
                                  graph_size=key_space, batch=0,
+                                 n_shards=1,
                                  snap_ms=snap_ms,
                                  us_per_query=1e3 * snap_ms / MAINT_QUERY_WINDOW))
     return rows
@@ -282,12 +322,13 @@ def main(argv=None):
         kernels=kernels,
         maint_batches=4 if quick else 8,
         update_batches=(8, 64) if quick else (8, 32, 128),
+        shard_counts=(1, 2) if quick else (1, 4),
     )
-    print("bench,engine,impl,build,graph_size,batch,snap_ms,us_per_query")
+    print("bench,engine,impl,build,graph_size,batch,n_shards,snap_ms,us_per_query")
     for r in rows:
         print(
             f"graph_reachability,{r['engine']},{r['impl']},{r['build']},"
-            f"{r['graph_size']},{r['batch']},{r['snap_ms']:.3f},"
+            f"{r['graph_size']},{r['batch']},{r['n_shards']},{r['snap_ms']:.3f},"
             f"{r['us_per_query']:.2f}"
         )
     # the maintenance trajectory, machine-readable (CI uploads it next to

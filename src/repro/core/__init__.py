@@ -12,9 +12,15 @@ Public API:
   * :mod:`repro.core.maintenance` — device-resident state maintenance:
     growth rehash (live-compact + snapshot-compact) and the CSR delta-merge,
     built on the :mod:`repro.kernels.compact` sort + prefix-sum primitives.
+  * :mod:`repro.core.sharding` — hash-prefix partitioning of the tables
+    across a device mesh (``WaitFreeGraph(n_shards=...)``): shard routing,
+    per-shard engine passes, cross-shard CSR fusion.
+
+The paper-to-code map — which paper concept lives in which module — is
+``docs/ARCHITECTURE.md``.
 """
 
-from . import maintenance
+from . import maintenance, sharding
 from .graph import WaitFreeGraph
 from .oracle import SequentialGraph, run_sequential
 from .traversal import (
@@ -45,6 +51,7 @@ from .types import (
 __all__ = [
     "WaitFreeGraph",
     "maintenance",
+    "sharding",
     "SequentialGraph",
     "run_sequential",
     "TraversalCSR",

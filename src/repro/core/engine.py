@@ -33,6 +33,11 @@ against ``repro.core.oracle``).  Structure:
 
 Everything is int32/bool — results are asserted *exactly* equal to the
 oracle, not allclose.
+
+Each op linearizes at its phase stamp: a batch's results are exactly those
+of the phase-ordered sequential execution.  Where this engine sits in the
+paper-to-code map — and how sharding runs it unchanged per shard — is
+``docs/ARCHITECTURE.md``.
 """
 
 from __future__ import annotations

@@ -20,6 +20,13 @@ fraction, mirroring the paper's "very less number of failures" — is resolved
 by the full wait-free engine with the fast ops masked to NOPs.  Both paths
 are bounded, so the hybrid is still wait-free, and `lax.cond` skips the slow
 pass entirely when a batch is conflict-free.
+
+The conflict mask is a pure function of the batch silhouette (op kinds,
+keys, endpoints) — which is why hash-prefix sharding
+(:mod:`repro.core.sharding`) rewrites non-owned edge mutations to
+read-only ops instead of dropping them: every shard computes the identical
+mask, takes the identical fast/slow path per op, and the vertex replicas
+stay byte-identical.  Paper-to-code map: ``docs/ARCHITECTURE.md``.
 """
 
 from __future__ import annotations

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import engine, fastpath, maintenance, traversal
+from . import engine, fastpath, maintenance, sharding, traversal
 from .types import (
     EMPTY_KEY,
     GROW_LOAD_FACTOR,
@@ -35,11 +35,22 @@ from .types import (
     OP_REMOVE_EDGE,
     OP_REMOVE_VERTEX,
     GraphState,
+    is_pow2,
     make_batch,
     make_state,
 )
 
 _MAX_GROW_ATTEMPTS = 12
+
+_MUTATING_OPS = (OP_ADD_VERTEX, OP_REMOVE_VERTEX, OP_ADD_EDGE, OP_REMOVE_EDGE)
+
+
+def _bucket_size(n: int) -> int:
+    """Power-of-two batch bucket (floor 64), shared by ``apply`` and its
+    sharded twin: the sharded-vs-1-shard byte-identity contract requires
+    identical padding and phase stamps in both paths, so there is exactly
+    one definition of the bucket rule."""
+    return max(64, 1 << max(n - 1, 1).bit_length())
 
 
 @jax.jit
@@ -114,6 +125,15 @@ class WaitFreeGraph:
     interpreter, ``"host"`` keeps the vectorized-numpy oracle.  ``None`` =
     auto: device on TPU, host elsewhere.  All impls produce bit-identical
     tables, so the flag is purely a performance knob.
+
+    ``n_shards`` hash-prefix-partitions the edge table into that many
+    per-shard states (vertex table deterministically replicated, edge ops
+    routed by the prefix of the hash the probe sequence already uses — see
+    :mod:`repro.core.sharding`), round-robined over ``mesh`` (default: a
+    host-local :func:`repro.core.sharding.host_local_mesh`).  ``n_shards=1``
+    (the default) bypasses the routing layer entirely; any shard count
+    produces byte-identical query results (pinned by
+    ``tests/test_sharding.py``), so the flag is a pure scaling knob.
     """
 
     def __init__(
@@ -124,13 +144,30 @@ class WaitFreeGraph:
         traversal_impl: Optional[str] = None,
         csr_maintenance: str = "delta",
         maintenance_impl: Optional[str] = None,
+        n_shards: int = 1,
+        mesh=None,
     ):
         assert mode in ("waitfree", "fpsp")
         assert csr_maintenance in ("delta", "rebuild")
         assert maintenance_impl in maintenance.MAINTENANCE_IMPLS
+        assert is_pow2(n_shards), "n_shards must be a power of two"
         self._csr: Optional[traversal.TraversalCSR] = None  # cached snapshot
         self._grow_csr: Optional[traversal.TraversalCSR] = None
-        self.state = make_state(v_capacity, e_capacity)
+        self._grow_shard_csrs: Optional[List[traversal.TraversalCSR]] = None
+        self._shard_csr_bases: Optional[List[traversal.TraversalCSR]] = None
+        self.n_shards = n_shards
+        self._mesh = None
+        if n_shards == 1:
+            self.state = make_state(v_capacity, e_capacity)
+        else:
+            assert e_capacity % n_shards == 0 and is_pow2(e_capacity // n_shards), (
+                "e_capacity must split into power-of-two per-shard capacities"
+            )
+            self._mesh = mesh if mesh is not None else sharding.host_local_mesh()
+            self.shards = sharding.place_shards(
+                sharding.make_shard_states(v_capacity, e_capacity // n_shards, n_shards),
+                self._mesh,
+            )
         self.mode = mode
         self.traversal_impl = traversal_impl
         self.csr_maintenance = csr_maintenance
@@ -139,6 +176,11 @@ class WaitFreeGraph:
 
     @property
     def state(self) -> GraphState:
+        if self.n_shards > 1:
+            raise AttributeError(
+                "sharded graph: per-shard states live on .shards "
+                "(vertex columns are replicas; edge tables are partitions)"
+            )
         return self._state
 
     @state.setter
@@ -149,6 +191,20 @@ class WaitFreeGraph:
         self._state = value
         self._csr = None
         self._delta_base = None
+        self._delta_batches = []
+
+    @property
+    def shards(self) -> List[GraphState]:
+        return self._shards
+
+    @shards.setter
+    def shards(self, value) -> None:
+        # same invalidation contract as the ``state`` setter, for the
+        # sharded snapshot bookkeeping (fused cache + per-shard delta bases)
+        self._shards = list(value)
+        self._csr = None
+        self._delta_base = None
+        self._shard_csr_bases = None
         self._delta_batches = []
 
     # -- batched API ------------------------------------------------------
@@ -170,8 +226,9 @@ class WaitFreeGraph:
         ops0 = np.asarray(ops, np.int32)
         us0 = np.asarray(us, np.int32)
         vs0 = np.zeros_like(us0) if vs is None else np.asarray(vs, np.int32)
-        mutating = bool(np.isin(ops0, (OP_ADD_VERTEX, OP_REMOVE_VERTEX,
-                                       OP_ADD_EDGE, OP_REMOVE_EDGE)).any())
+        if self.n_shards > 1:
+            return self._apply_sharded(ops0, us0, vs0)
+        mutating = bool(np.isin(ops0, _MUTATING_OPS).any())
         saved_csr = None if mutating else self._csr
         # the pending-delta queue (base snapshot + unpadded batches since the
         # last query) survives the state swap below: read-only batches carry
@@ -181,7 +238,7 @@ class WaitFreeGraph:
         delta_base, delta_batches = self._delta_base, self._delta_batches
         if mutating and self.csr_maintenance == "delta" and self._csr is not None:
             delta_base, delta_batches = self._csr, []
-        bucket = max(64, 1 << max(n - 1, 1).bit_length())
+        bucket = _bucket_size(n)
         ops, us, vs = ops0, us0, vs0
         if bucket != n:
             pad = np.zeros(bucket - n, np.int32)  # OP_NOP = 0
@@ -269,6 +326,142 @@ class WaitFreeGraph:
         self._grow_csr = csr
         return new_state
 
+    # -- hash-prefix sharded apply (see repro.core.sharding) ----------------
+
+    def _apply_sharded(self, ops0, us0, vs0) -> np.ndarray:
+        """The n_shards > 1 twin of ``apply``: route the batch, run every
+        shard's engine pass (full batch shape, non-owned edge mutations
+        rewritten read-only — the replica invariant), gather per-lane
+        results from the owner shards, and grow transactionally on any
+        shard's overflow.  Linearization is unchanged: one phase window per
+        batch, shared by every shard.
+
+        The snapshot bookkeeping below deliberately mirrors ``apply``'s
+        state machine step for step (saved snapshot on read-only batches,
+        delta-queue append with a footprint floor, growth seeding on
+        attempt > 0) — when editing either twin, port the change to the
+        other; only the queue-entry layout differs (routed per-shard op
+        arrays here, one op array there) plus the floor, which takes the
+        *minimum* shard e-capacity since every shard must stay foldable."""
+        n = ops0.shape[0]
+        mutating = bool(np.isin(ops0, _MUTATING_OPS).any())
+        saved_csr = None if mutating else self._csr
+        delta_bases, delta_batches = self._shard_csr_bases, self._delta_batches
+        if mutating and self.csr_maintenance == "delta" and self._csr is not None:
+            delta_bases, delta_batches = self._shard_csr_bases, []
+        shard_ops, owner = sharding.route_ops(ops0, us0, vs0, self.n_shards)
+        bucket = _bucket_size(n)
+        pad = np.zeros(bucket - n, np.int32)
+        us_p = np.concatenate([us0, pad])
+        vs_p = np.concatenate([vs0, pad])
+        batches = [
+            make_batch(np.concatenate([so, pad]), us_p, vs_p, phase_base=self._phase)
+            for so in shard_ops
+        ]
+        self._phase += bucket
+        apply_fn = engine.apply_batch if self.mode == "waitfree" else fastpath.apply_batch_fpsp
+
+        self._grow_shard_csrs = None
+        for attempt in range(_MAX_GROW_ATTEMPTS):
+            pre = self._shards  # kept alive for transactional retry
+            results = [apply_fn(st, b) for st, b in zip(pre, batches)]
+            states = [r.state for r in results]
+            if all(bool(r.ok) for r in results) and not self._needs_growth_sharded(states):
+                grow_csrs = self._grow_shard_csrs
+                self.shards = states
+                # vertex lanes: every replica agrees (shard 0 speaks); edge
+                # lanes: the owner shard's result is the only real one
+                success = np.stack([np.asarray(r.success)[:n] for r in results])
+                out = success[owner, np.arange(n)]
+                if attempt > 0:
+                    # growth rehashed every shard, voiding all prior bases
+                    # (the shards setter already dropped them) — but the
+                    # rehash pre-compacted each grown shard's snapshot
+                    # (maintenance "snapshot-compact"), so queue the retried
+                    # batch against those: the next query pays one delta
+                    # fold per shard instead of full rebuilds, exactly like
+                    # the 1-shard path.
+                    if (
+                        mutating
+                        and grow_csrs is not None
+                        and self.csr_maintenance == "delta"
+                        and all(c is not None for c in grow_csrs)
+                    ):
+                        self._shard_csr_bases = grow_csrs
+                        self._delta_batches = [(shard_ops, us0, vs0)]
+                    return out
+                if not mutating:
+                    self._csr = saved_csr
+                    self._shard_csr_bases = delta_bases
+                    self._delta_batches = delta_batches
+                elif delta_bases is not None and self.csr_maintenance == "delta":
+                    # queue the routed batch against the per-shard bases;
+                    # traversal_csr() folds each shard's queue on next query
+                    delta_batches = delta_batches + [(shard_ops, us0, vs0)]
+                    floor = min(c.e_capacity for c in delta_bases) // 4
+                    if sum(b[1].size for b in delta_batches) > floor:
+                        delta_bases, delta_batches = None, []
+                    self._shard_csr_bases = delta_bases
+                    self._delta_batches = delta_batches
+                return out
+            self.shards = self._grow_shards(pre)
+        raise RuntimeError("graph growth did not converge")
+
+    def _needs_growth_sharded(self, states: List[GraphState]) -> bool:
+        # one _live_counts dispatch per shard: the vertex check reads shard
+        # 0's counts (the replicas agree byte-for-byte, shard 0 speaks)
+        counts = [_live_counts(st) for st in states]
+        if bool(counts[0][2] > GROW_LOAD_FACTOR * states[0].v_capacity):
+            return True
+        return any(
+            bool(c[3] > GROW_LOAD_FACTOR * st.e_capacity)
+            for c, st in zip(counts, states)
+        )
+
+    def _grow_shards(self, states: List[GraphState]) -> List[GraphState]:
+        """Per-shard capacity policy: the vertex capacity is shared (one
+        decision for all replicas, so they stay aligned), edge capacities
+        double independently per crowded shard.  Every shard is rehashed in
+        the same round even at unchanged capacity — vertex-tombstone
+        compaction must happen in lockstep or the replicas would diverge."""
+        v_used = int(_live_counts(states[0])[2])
+        new_vcap = states[0].v_capacity
+        if v_used > GROW_LOAD_FACTOR * new_vcap / 2:
+            new_vcap *= 2
+        new_ecaps = []
+        for st in states:
+            e_used = int(_live_counts(st)[3])
+            crowded = e_used > GROW_LOAD_FACTOR * st.e_capacity / 2
+            new_ecaps.append(2 * st.e_capacity if crowded else st.e_capacity)
+        if new_vcap == states[0].v_capacity and all(
+            ec == st.e_capacity for ec, st in zip(new_ecaps, states)
+        ):
+            new_vcap *= 2
+            new_ecaps = [2 * ec for ec in new_ecaps]
+        impl = maintenance.resolve_impl(self.maintenance_impl)
+        # per-shard snapshot-compact rides the device rehash nearly free (one
+        # argsort each); on the host it would be an eager build_csr per shard
+        # per grow attempt — leave that lazy, same policy as 1-shard _grow
+        with_csr = impl != "host" and self.csr_maintenance == "delta"
+        for _ in range(_MAX_GROW_ATTEMPTS):
+            outs = [
+                maintenance.rehash(st, new_vcap, ec, impl=impl, with_csr=with_csr)
+                for st, ec in zip(states, new_ecaps)
+            ]
+            oks = [bool(ok) for _, _, ok in outs]
+            if all(oks):
+                # stashed for _apply_sharded: becomes the per-shard delta
+                # bases of the retried batch (the shards setter must not
+                # clear it — the grown shards are installed right after)
+                self._grow_shard_csrs = [c for _, c, _ in outs] if with_csr else None
+                return sharding.place_shards([s for s, _, _ in outs], self._mesh)
+            if not any(oks):
+                # identical vertex replicas fail identically: when every
+                # shard overflows, the vertex table is the likely culprit
+                new_vcap *= 2
+            new_ecaps = [2 * ec if not ok else ec for ec, ok in zip(new_ecaps, oks)]
+        raise RuntimeError("rehash placement did not converge")
+
     # -- the paper's six-operation convenience API -------------------------
     def add_vertex(self, u: int) -> bool:
         return bool(self.apply([OP_ADD_VERTEX], [u])[0])
@@ -303,7 +496,36 @@ class WaitFreeGraph:
         :func:`repro.core.traversal.apply_delta` call (result-blind
         reconciliation re-probes the union of touched keys against the
         *current* state, so one fold over many batches is exact); otherwise
-        the snapshot is recompacted from scratch."""
+        the snapshot is recompacted from scratch.
+
+        Sharded graphs (``n_shards > 1``) build/fold one CSR per shard —
+        each fold sees only that shard's routed ops, so it stays O(shard
+        batch) — and fuse them (:func:`repro.core.sharding.fuse_csrs`) into
+        the one global snapshot every query linearizes against."""
+        if self.n_shards > 1:
+            if self._csr is None:
+                if self._shard_csr_bases is not None and self._delta_batches:
+                    us_cat = np.concatenate([b[1] for b in self._delta_batches])
+                    vs_cat = np.concatenate([b[2] for b in self._delta_batches])
+                    per_shard = [
+                        traversal.apply_delta(
+                            base,
+                            st,
+                            np.concatenate([b[0][s] for b in self._delta_batches]),
+                            us_cat,
+                            vs_cat,
+                            impl=self.maintenance_impl,
+                        )
+                        for s, (base, st) in enumerate(
+                            zip(self._shard_csr_bases, self._shards)
+                        )
+                    ]
+                else:
+                    per_shard = [traversal.build_csr(st) for st in self._shards]
+                self._csr = sharding.fuse_csrs(per_shard)
+                self._shard_csr_bases = per_shard
+                self._delta_batches = []
+            return self._csr
         if self._csr is None:
             if self._delta_base is not None and self._delta_batches:
                 self._csr = traversal.apply_delta(
@@ -412,7 +634,22 @@ class WaitFreeGraph:
 
         Vectorized: one device pass computes the live-vertex and
         incarnation-valid-edge masks (shared with the traversal engine's CSR
-        validity predicate); host work is O(live), not O(capacity)."""
+        validity predicate); host work is O(live), not O(capacity).
+
+        Sharded graphs union the per-shard edge sets (disjoint partitions)
+        under the shard-0 vertex replica."""
+        if self.n_shards > 1:
+            verts = set()
+            edges = set()
+            for i, st in enumerate(self._shards):
+                v_mask, e_mask = traversal.snapshot_live(st)
+                if i == 0:  # vertex replicas agree: shard 0 speaks for all
+                    verts = set(np.asarray(st.v_key)[np.asarray(v_mask)].tolist())
+                e_mask = np.asarray(e_mask)
+                eu = np.asarray(st.e_key_u)[e_mask].tolist()
+                ev = np.asarray(st.e_key_v)[e_mask].tolist()
+                edges |= set(zip(eu, ev))
+            return verts, edges
         v_mask, e_mask = traversal.snapshot_live(self.state)
         v_mask = np.asarray(v_mask)
         e_mask = np.asarray(e_mask)

@@ -5,11 +5,18 @@ on a vector machine pointer chasing is hostile, so locate becomes a bounded
 linear-probe over a power-of-two table.  The probe bound (MAX_PROBES) is what
 keeps locate wait-free: a chain longer than the bound trips table growth
 instead of spinning.
+
+One 32-bit hash serves two consumers (see ``docs/ARCHITECTURE.md``): the
+probe sequence uses its low bits (the *suffix*, ``& (capacity - 1)``) as the
+home slot, and :mod:`repro.core.sharding` uses its top bits (the *prefix*)
+as the shard id.  ``vertex_hash32`` / ``edge_hash32`` expose the full hash
+so both consumers provably read the same value.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def _mix32(x: jnp.ndarray) -> jnp.ndarray:
@@ -23,15 +30,49 @@ def _mix32(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
+def _mix32_np(x: np.ndarray) -> np.ndarray:
+    """numpy twin of :func:`_mix32` (uint32 wraparound), kept next to its
+    source: the host rehash oracle (:mod:`repro.core.maintenance`) and the
+    shard router (:mod:`repro.core.sharding`) must read *bit-identically*
+    the hash the device probes with — one definition, not hand-copies."""
+    x = x.astype(np.uint32)
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x85EBCA6B)
+    x = x ^ (x >> np.uint32(13))
+    x = x * np.uint32(0xC2B2AE35)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def vertex_hash32_np(key: np.ndarray) -> np.ndarray:
+    """numpy twin of :func:`vertex_hash32`."""
+    return _mix32_np(key)
+
+
+def edge_hash32_np(us: np.ndarray, vs: np.ndarray) -> np.ndarray:
+    """numpy twin of :func:`edge_hash32`."""
+    return _mix32_np(us.astype(np.uint32) * np.uint32(0x9E3779B9) + _mix32_np(vs))
+
+
+def vertex_hash32(key: jnp.ndarray) -> jnp.ndarray:
+    """The full 32-bit vertex hash (uint32) the table suffix/shard prefix
+    are both carved from."""
+    return _mix32(key)
+
+
+def edge_hash32(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """The full 32-bit edge hash (uint32); order-sensitive (directed)."""
+    return _mix32(u.astype(jnp.uint32) * jnp.uint32(0x9E3779B9) + _mix32(v))
+
+
 def hash_vertex(key: jnp.ndarray, capacity: int) -> jnp.ndarray:
     """Home slot for a vertex key in a power-of-two table."""
-    return (_mix32(key) & jnp.uint32(capacity - 1)).astype(jnp.int32)
+    return (vertex_hash32(key) & jnp.uint32(capacity - 1)).astype(jnp.int32)
 
 
 def hash_edge(u: jnp.ndarray, v: jnp.ndarray, capacity: int) -> jnp.ndarray:
     """Home slot for an edge key pair (u, v); order-sensitive (directed)."""
-    h = _mix32(u.astype(jnp.uint32) * jnp.uint32(0x9E3779B9) + _mix32(v))
-    return (h & jnp.uint32(capacity - 1)).astype(jnp.int32)
+    return (edge_hash32(u, v) & jnp.uint32(capacity - 1)).astype(jnp.int32)
 
 
 def probe_slot(home: jnp.ndarray, step: jnp.ndarray, capacity: int) -> jnp.ndarray:

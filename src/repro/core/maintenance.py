@@ -50,7 +50,21 @@ Impl selection (the ``maintenance_impl`` flag on ``WaitFreeGraph``):
 All impls produce bit-identical tables: placement is priority-ordered
 claim rounds (lowest compaction index wins each contended slot), which is
 deterministic and order-independent of how the rounds are vectorized —
-see ``repro.kernels.compact.ref``.
+see ``repro.kernels.compact.ref`` and ``docs/KERNELS.md`` (the shared
+``kernel/ops/ref`` contract and the ``probe_place`` VMEM limit).
+
+**Linearization point** (mirroring the paper's growth argument): *a rehash
+linearizes at the batch boundary that triggered it — the caller discards
+the overflowing post-state and re-applies the same batch against the grown
+pre-state, so no operation ever observes a half-compacted table, and the
+abstract graph before and after the rehash is identical* (physical deletion
+only reclaims tombstones and incarnation-stale edges, which are already
+outside the abstract state).  A ``delta_merge`` inherits the linearization
+point of the CSR it folds into (:mod:`repro.core.traversal`).  Under
+hash-prefix sharding (:mod:`repro.core.sharding`) each shard rehashes its
+own tables with this exact code — placement is per-shard by construction —
+and ``WaitFreeGraph._grow_shards`` synchronizes the rounds so the vertex
+replicas compact in lockstep.
 """
 
 from __future__ import annotations
@@ -65,7 +79,7 @@ import numpy as np
 from repro.kernels.compact import masked_compact, probe_place
 from repro.kernels.compact.ops import _resolve as _resolve_compact_impl
 
-from .hashing import hash_edge, hash_vertex
+from .hashing import edge_hash32_np, hash_edge, hash_vertex, vertex_hash32_np
 from .traversal import TraversalCSR, _delta_probe_parts, _edge_validity, build_csr
 from .types import ABSENT_INC, EMPTY_KEY, MAX_PROBES, GraphState
 
@@ -97,24 +111,14 @@ def _primitive_impl(impl: Optional[str]) -> str:
 # ---------------------------------------------------------------------------
 
 
-def _mix32_np(x: np.ndarray) -> np.ndarray:
-    """numpy replica of repro.core.hashing._mix32 (uint32 wraparound)."""
-    x = x.astype(np.uint32)
-    x = x ^ (x >> np.uint32(16))
-    x = x * np.uint32(0x85EBCA6B)
-    x = x ^ (x >> np.uint32(13))
-    x = x * np.uint32(0xC2B2AE35)
-    x = x ^ (x >> np.uint32(16))
-    return x
-
-
 def _vhome_np(keys: np.ndarray, capacity: int) -> np.ndarray:
-    return (_mix32_np(keys) & np.uint32(capacity - 1)).astype(np.int32)
+    # home slots from the shared numpy hash twins (repro.core.hashing keeps
+    # them next to the jnp source so the oracle can never drift)
+    return (vertex_hash32_np(keys) & np.uint32(capacity - 1)).astype(np.int32)
 
 
 def _ehome_np(us: np.ndarray, vs: np.ndarray, capacity: int) -> np.ndarray:
-    h = _mix32_np(us.astype(np.uint32) * np.uint32(0x9E3779B9) + _mix32_np(vs))
-    return (h & np.uint32(capacity - 1)).astype(np.int32)
+    return (edge_hash32_np(us, vs) & np.uint32(capacity - 1)).astype(np.int32)
 
 
 def _probe_place_host(

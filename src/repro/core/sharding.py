@@ -1,0 +1,221 @@
+"""Hash-prefix sharding of the graph tables across a device mesh.
+
+The paper scales by letting every thread make progress against one shared
+structure; the dataflow analogue scales by *partitioning* that structure
+across devices.  This module is the routing layer that turns ``S``
+unmodified per-shard :class:`~repro.core.types.GraphState` instances into
+one graph (the decomposition arXiv 1809.00896 uses to keep reachability
+queries independent of mutators, with the snapshot discipline of arXiv
+2310.02380 at the cross-shard boundary).  See ``docs/ARCHITECTURE.md`` for
+the paper-to-code map.
+
+**Partition rule.**  An edge key ``(u, v)`` lives in shard
+``edge_hash32(u, v) >> (32 - log2 S)`` — the top ``log2 S`` bits (the
+*prefix*) of exactly the 32-bit hash whose low bits (the *suffix*,
+``& (capacity - 1)``) the probe sequence already uses as the home slot
+(:mod:`repro.core.hashing`).  Prefix and suffix are disjoint bit fields for
+any per-shard capacity ≤ ``2**(32 - log2 S)``, so routing is independent of
+within-shard probing and every shard runs the existing
+``hash_probe`` locate, ``probe_place`` placement, and ``masked_compact``
+rehash **unchanged** — no kernel knows sharding exists.
+
+**Vertex replication.**  Edge ops must observe endpoint liveness *at their
+own phase* (the paper's Fig. 3 stabbing subtlety), which a partitioned
+vertex table cannot answer shard-locally.  The vertex table is therefore a
+*deterministic replica*: every shard applies the identical vertex-op
+sub-stream at the identical phase stamps.  The engines' vertex wave is
+independent of edge ops, and :func:`route_ops` preserves batch shape (see
+below), so the replicas — placement included — stay **byte-identical**
+across shards and to the 1-shard graph (pinned by
+``tests/test_sharding.py``).  Replication costs vertex memory ``S×``;
+the edge table, the capacity-dominant structure (4× the vertex table at
+default sizes), is what partitioning scales.
+
+**Batch routing** (:func:`route_ops`).  Every shard receives the *full*
+batch with non-owned edge *mutations* rewritten to the read-only
+``OP_CONTAINS_EDGE`` rather than dropped.  Rewriting instead of dropping is
+what makes replication exact: the FPSP conflict mask and both engines'
+claim priorities depend on batch shape and edge-endpoint membership, so
+every shard must see the identical silhouette.  A rewritten op can never
+write (contains mutates nothing, and a non-owned key is never present in
+the shard's edge table), and its result is discarded — per-op results are
+gathered from the owner shard (edge ops) or shard 0 (vertex ops, all
+replicas agree).
+
+**Linearization** (mirroring the related papers' snapshot theorems): *a
+cross-shard traversal snapshot is the fusion (:func:`fuse_csrs`) of the S
+per-shard CSRs taken after all S shards installed their post-batch states;
+since each shard's CSR linearizes at the same batch boundary and shards
+partition the edge key space disjointly, the fused CSR is a consistent cut
+of the whole graph at that boundary.*  Queries on the fused CSR
+(``frontier`` / ``bfs`` / ``get_path``) run exactly as on a 1-shard CSR —
+fusion concatenates the per-shard edge arrays with a shard-offset lane
+remap and one stable re-sort, and the per-shard vertex columns are replicas
+so slot identity is already global.
+
+``WaitFreeGraph(n_shards=...)`` (:mod:`repro.core.graph`) owns the
+host-side loop: route, apply per shard, gather results, grow per shard
+(:mod:`repro.core.maintenance` rehash, synchronized so replicas stay
+aligned).  ``n_shards=1`` bypasses this module entirely and is
+bit-identical to the pre-sharding code path.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import edge_hash32_np
+from .traversal import TraversalCSR
+from .types import (
+    EDGE_OPS,
+    OP_ADD_EDGE,
+    OP_CONTAINS_EDGE,
+    OP_REMOVE_EDGE,
+    GraphState,
+    is_pow2,
+    make_state,
+)
+
+
+def shard_of_edges(us: np.ndarray, vs: np.ndarray, n_shards: int) -> np.ndarray:
+    """Owner shard per edge key: the top ``log2 n_shards`` bits (prefix) of
+    the same 32-bit hash whose suffix is the probe home slot."""
+    assert is_pow2(n_shards), "n_shards must be a power of two"
+    us = np.asarray(us, np.int32)
+    if n_shards == 1:
+        return np.zeros(us.shape, np.int32)
+    k = n_shards.bit_length() - 1
+    return (edge_hash32_np(us, np.asarray(vs, np.int32)) >> np.uint32(32 - k)).astype(
+        np.int32
+    )
+
+
+def route_ops(
+    ops: np.ndarray, us: np.ndarray, vs: np.ndarray, n_shards: int
+) -> Tuple[List[np.ndarray], np.ndarray]:
+    """Per-shard op arrays + owner shard per lane.
+
+    Shard ``s`` receives the full batch with non-owned edge mutations
+    (AddE/RemE) rewritten to ``OP_CONTAINS_EDGE`` — same length, same
+    ``(u, v, phase)`` lanes, same vertex/edge-op silhouette, so conflict
+    masks and claim priorities are identical in every shard (the replica
+    invariant; see the module docstring).  ``owner[i]`` is the shard whose
+    result is authoritative for lane ``i`` (0 for vertex ops and NOPs).
+    """
+    ops = np.asarray(ops, np.int32)
+    owner = np.zeros(ops.shape, np.int32)
+    is_edge = np.isin(ops, EDGE_OPS)
+    owner[is_edge] = shard_of_edges(us[is_edge], vs[is_edge], n_shards)
+    is_emut = (ops == OP_ADD_EDGE) | (ops == OP_REMOVE_EDGE)
+    shard_ops = []
+    for s in range(n_shards):
+        o = ops.copy()
+        o[is_emut & (owner != s)] = OP_CONTAINS_EDGE
+        shard_ops.append(o)
+    return shard_ops, owner
+
+
+def make_shard_states(
+    v_capacity: int, e_shard_capacity: int, n_shards: int
+) -> List[GraphState]:
+    """Fresh empty shards: each carries the full-capacity vertex replica and
+    a ``1/n_shards`` partition of the edge capacity."""
+    return [make_state(v_capacity, e_shard_capacity) for _ in range(n_shards)]
+
+
+# ---------------------------------------------------------------------------
+# cross-shard snapshot fusion
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _fuse_csrs_jit(csrs: Tuple[TraversalCSR, ...]) -> TraversalCSR:
+    first = csrs[0]
+    cv = first.v_key.shape[0]
+    i32 = jnp.int32
+    # shard-offset lane remap: global lane = shard offset + local lane (the
+    # provenance a future cross-shard delta fold would splice against)
+    offs = np.cumsum([0] + [c.src.shape[0] for c in csrs[:-1]])
+    src = jnp.concatenate([c.src for c in csrs])
+    dst = jnp.concatenate([c.dst for c in csrs])
+    lane = jnp.concatenate([c.lane + i32(o) for c, o in zip(csrs, offs)])
+    # per-shard invalid entries already carry src == Cv (the shared sentinel
+    # — vertex capacity is a replica invariant), so one stable sort pushes
+    # them all to the fused tail, exactly like build_csr's
+    order = jnp.argsort(src, stable=True).astype(i32)
+    src, dst, lane = src[order], dst[order], lane[order]
+    rows = jnp.arange(cv, dtype=i32)
+    return TraversalCSR(
+        # vertex columns are byte-identical replicas: shard 0 speaks for all
+        v_key=first.v_key,
+        v_live=first.v_live,
+        v_inc=first.v_inc,
+        n_live=first.n_live,
+        src=src,
+        dst=dst,
+        lane=lane,
+        row_start=jnp.searchsorted(src, rows, side="left").astype(i32),
+        row_end=jnp.searchsorted(src, rows, side="right").astype(i32),
+        n_edges=sum(c.n_edges for c in csrs).astype(i32),
+    )
+
+
+def fuse_csrs(csrs: Sequence[TraversalCSR]) -> TraversalCSR:
+    """Concatenate per-shard snapshots into one global CSR.
+
+    The result is a plain :class:`~repro.core.traversal.TraversalCSR` —
+    every traversal query (``reachable``/``bfs_parents``/``path_probe``/
+    ``khop_mask``) runs on it exactly as on a 1-shard snapshot.  With one
+    shard this is the identity (bit-identical to the pre-sharding path).
+    Fused ``dst`` order within a row follows (shard, local lane) rather than
+    the 1-shard global lane order; every query result is order-independent
+    (scatter-*min*), so results — levels, parents, paths — are still
+    byte-identical to the 1-shard graph's.
+    """
+    csrs = list(csrs)
+    if len(csrs) == 1:
+        return csrs[0]
+    cv = csrs[0].v_capacity
+    assert all(c.v_capacity == cv for c in csrs), "vertex replicas must agree"
+    return _fuse_csrs_jit(tuple(csrs))
+
+
+# ---------------------------------------------------------------------------
+# mesh placement
+# ---------------------------------------------------------------------------
+
+
+def host_local_mesh() -> jax.sharding.Mesh:
+    """A 1-D ``jax.sharding.Mesh`` over every local device (named
+    ``"shard"``).  On single-device CPU this is the degenerate mesh the
+    bit-identity tests pin the multi-shard path against; on a TPU slice the
+    same code round-robins shards across real devices."""
+    devs = np.asarray(jax.devices())
+    return jax.sharding.Mesh(devs.reshape(-1), ("shard",))
+
+
+def place_shards(
+    states: Sequence[GraphState], mesh: Optional[jax.sharding.Mesh] = None
+) -> List[GraphState]:
+    """Pin shard ``i`` to mesh device ``i % n_devices`` (round-robin).
+
+    Placement never changes values — shard states are pure pytrees — so it
+    is a no-op semantically and a locality hint physically."""
+    mesh = host_local_mesh() if mesh is None else mesh
+    devs = list(mesh.devices.flat)
+    return [jax.device_put(s, devs[i % len(devs)]) for i, s in enumerate(states)]
+
+
+def edge_shard_histogram(
+    ops: np.ndarray, us: np.ndarray, vs: np.ndarray, n_shards: int
+) -> np.ndarray:
+    """Edge-op count per shard for one batch — the balance metric (uniform
+    keys → near-uniform prefixes; see ``workloads.shard_balance``)."""
+    ops = np.asarray(ops, np.int32)
+    mask = np.isin(ops, EDGE_OPS)
+    sid = shard_of_edges(np.asarray(us, np.int32)[mask], np.asarray(vs, np.int32)[mask], n_shards)
+    return np.bincount(sid, minlength=n_shards)

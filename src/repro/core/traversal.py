@@ -46,8 +46,22 @@ run on top.  This module is the dataflow analogue of their wait-free
    needs), :func:`khop_mask` (bounded-depth neighborhoods).  All are exact
    against :class:`repro.core.oracle` (see ``tests/test_traversal.py``).
 
+**Linearization point** (the dataflow mirror of the related papers'
+snapshot theorems): *every query against a ``TraversalCSR`` linearizes at
+the boundary of the update batch whose post-state the CSR was built (or
+delta-folded) from; all queries sharing one CSR observe the same abstract
+graph, and no query observes a partially applied batch.*  This holds
+because a CSR is a pure value compacted from one installed
+:class:`~repro.core.types.GraphState` — there is no interleaving to
+observe.  Under hash-prefix sharding the same statement holds for the
+*fused* CSR (:func:`repro.core.sharding.fuse_csrs`): every shard installed
+its post-batch state before fusion, and shards partition the edge keys
+disjointly, so the fusion is a consistent cut at the same batch boundary.
+
 Host-side convenience wrappers (key-space in/out, batch bucketing, path
-reconstruction) live on :class:`repro.core.graph.WaitFreeGraph`.
+reconstruction) live on :class:`repro.core.graph.WaitFreeGraph`.  The
+paper-to-code map for this module is ``docs/ARCHITECTURE.md``; the kernel
+family contract behind :func:`frontier_expand` is ``docs/KERNELS.md``.
 """
 
 from __future__ import annotations

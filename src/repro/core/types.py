@@ -55,6 +55,12 @@ MAX_INSERT_ROUNDS = 16
 GROW_LOAD_FACTOR = 0.5
 
 
+def is_pow2(n: int) -> bool:
+    """Power-of-two check shared by table capacities and shard counts (both
+    must be powers of two so hash prefixes/suffixes are plain bit fields)."""
+    return n > 0 and (n & (n - 1)) == 0
+
+
 class GraphState(NamedTuple):
     """Functional (pure-pytree) state of the concurrent graph.
 
@@ -62,6 +68,12 @@ class GraphState(NamedTuple):
     pass returns a new one.  ``live=False`` with a retained key is exactly a
     Harris "marked" node: logically deleted, physically present until a
     rehash (compaction) reclaims it.
+
+    Under hash-prefix sharding (:mod:`repro.core.sharding`) one
+    ``GraphState`` holds one *shard*: its vertex table is a deterministic
+    replica shared by every shard, its edge table the shard's partition of
+    the edge key space.  Nothing in the struct changes — sharding is a
+    routing layer over unmodified per-shard states.
     """
 
     # vertex table (capacity Cv)
@@ -112,8 +124,8 @@ class ApplyResult(NamedTuple):
 
 def make_state(v_capacity: int = 1024, e_capacity: int = 4096) -> GraphState:
     """Fresh empty graph with the given table capacities (powers of two)."""
-    assert v_capacity & (v_capacity - 1) == 0, "v_capacity must be a power of two"
-    assert e_capacity & (e_capacity - 1) == 0, "e_capacity must be a power of two"
+    assert is_pow2(v_capacity), "v_capacity must be a power of two"
+    assert is_pow2(e_capacity), "e_capacity must be a power of two"
     return GraphState(
         v_key=jnp.full((v_capacity,), EMPTY_KEY, dtype=jnp.int32),
         v_live=jnp.zeros((v_capacity,), dtype=bool),

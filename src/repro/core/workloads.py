@@ -81,6 +81,22 @@ def sample_update_batch(rng: np.random.Generator, n: int, key_space: int = 1000)
     return ops, us, vs
 
 
+def shard_balance(ops, us, vs, n_shards: int) -> np.ndarray:
+    """Edge-op count per hash-prefix shard for one batch
+    (:func:`repro.core.sharding.shard_of_edges` routing).
+
+    The sanity metric behind the sharded benchmark/example rows: the mixes
+    draw keys uniformly, so hash prefixes — and therefore shard loads —
+    stay near-uniform; a skewed histogram here means a skewed key
+    distribution, not a routing bug."""
+    from .sharding import edge_shard_histogram
+
+    return edge_shard_histogram(
+        np.asarray(ops, np.int32), np.asarray(us, np.int32),
+        np.asarray(vs, np.int32), n_shards,
+    )
+
+
 def initial_vertices(key_space: int = 1000):
     """The paper's initial graph: 1000 vertices (keys 0..999), no edges."""
     ops = np.full(key_space, OP_ADD_VERTEX, np.int32)

@@ -5,6 +5,11 @@ pure-jnp reference elsewhere.  ``REPRO_COMPACT_IMPL`` overrides the default
 (CI's ``kernels-interpret`` job sets it to ``kernel_interpret`` so the
 interpreter path is forced on CPU).  All impls are bit-identical; callers
 that need a *host* (numpy) oracle use ``repro.core.maintenance`` instead.
+
+The full ``kernel/ops/ref`` contract — and the ``probe_place`` VMEM limit
+(single-block occupancy map, ~2**22 slots) that hash-prefix sharding
+side-steps by keeping per-shard tables small — is documented once in
+``docs/KERNELS.md``.
 """
 
 from __future__ import annotations

@@ -3,7 +3,9 @@
 Dispatch mirrors ``repro.kernels.hash_probe``: the Pallas kernel on TPU,
 the pure-jnp reference elsewhere.  ``REPRO_FRONTIER_IMPL`` overrides the
 default (CI's ``kernels-interpret`` job sets it to ``kernel_interpret`` so
-the interpreter path is forced on CPU).
+the interpreter path is forced on CPU).  The shared ``kernel/ops/ref``
+contract and this family's VMEM tiling limits are documented in
+``docs/KERNELS.md``.
 """
 
 from __future__ import annotations

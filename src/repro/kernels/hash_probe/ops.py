@@ -1,4 +1,12 @@
-"""Public entry point for the batched hash probe."""
+"""Public entry point for the batched hash probe.
+
+The family follows the repo-wide ``kernel/ops/ref`` contract documented
+once in ``docs/KERNELS.md`` (bit-identity between impls, env-var override,
+interpret-mode CI parity).  Sharding note: the probe consumes only the
+*suffix* bits of the 32-bit key hash (``& (capacity - 1)``); the *prefix*
+bits route keys to shards (:mod:`repro.core.sharding`), so this kernel runs
+unchanged on a per-shard table.
+"""
 
 from __future__ import annotations
 

@@ -1,0 +1,313 @@
+"""Hash-prefix sharding: multi-shard bit-identity to the 1-shard oracle.
+
+The acceptance bar for ``repro.core.sharding`` is that ``n_shards`` is a
+pure scaling knob: over the 50-churned-graph corpus (25 seeds × 2 engine
+modes, deletion + incarnation churn included), ``n_shards ∈ {1, 2, 4}``
+must agree on
+
+* per-op success bits (and all must equal the sequential oracle),
+* the vertex tables, byte-for-byte — every shard's replica equals the
+  1-shard graph's table, placement included,
+* the fused ``TraversalCSR`` — ``src``/row offsets/vertex columns/counts
+  byte-equal to the 1-shard CSR, and the ``(src, dst)`` edge multiset
+  identical (``dst`` order *within* a row follows shard-lane provenance,
+  which is layout-dependent by design; every query is scatter-min and
+  therefore order-independent — asserted below, not assumed),
+* ``reachable`` / ``bfs`` / ``get_path`` results, byte-for-byte,
+
+plus growth: a repeated-doubling stress keeps replicas aligned and answers
+exact while per-shard edge capacities evolve independently.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import SequentialGraph, WaitFreeGraph, build_csr, run_sequential
+from repro.core import sharding
+from repro.core.hashing import edge_hash32
+from repro.core.types import (
+    OP_ADD_EDGE,
+    OP_ADD_VERTEX,
+    OP_CONTAINS_EDGE,
+    OP_REMOVE_EDGE,
+    OP_REMOVE_VERTEX,
+)
+from repro.core.workloads import (
+    initial_vertices,
+    sample_batch,
+    sample_query_pairs,
+    shard_balance,
+)
+
+KEY_SPACE = 24
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _assert_same_fields(got, want, ctx="", skip=()):
+    for name in want._fields:
+        if name in skip:
+            continue
+        a, b = np.asarray(getattr(got, name)), np.asarray(getattr(want, name))
+        assert a.dtype == b.dtype, (ctx, name, a.dtype, b.dtype)
+        assert np.array_equal(a, b), (ctx, name)
+
+
+def _churn_stream(seed: int):
+    """The test_maintenance churn recipe as a reusable op stream (tombstones
+    + incarnation churn — the Fig. 3 hazards)."""
+    rng = np.random.default_rng(seed)
+    stream = []
+    for _ in range(2):
+        stream.append(sample_batch(rng, 192, "traversal", key_space=KEY_SPACE))
+    kill = rng.choice(KEY_SPACE, size=8, replace=False).astype(np.int32)
+    stream.append((np.full(8, OP_REMOVE_VERTEX, np.int32), kill, np.zeros(8, np.int32)))
+    stream.append(
+        (np.full(4, OP_ADD_VERTEX, np.int32), kill[:4], np.zeros(4, np.int32))
+    )
+    stream.append(sample_batch(rng, 96, "traversal", key_space=KEY_SPACE))
+    return stream, rng
+
+
+def _build_corpus_case(seed: int, mode: str):
+    """One corpus case: the same churn stream through every shard count,
+    success bits cross-checked against the oracle at every batch."""
+    graphs = {
+        n: WaitFreeGraph(256, 1024, mode=mode, n_shards=n) for n in SHARD_COUNTS
+    }
+    oracle = SequentialGraph()
+    stream, rng = _churn_stream(seed)
+    for ops, us, vs in stream:
+        exp, _ = run_sequential(ops, us, vs, graph=oracle)
+        for n, g in graphs.items():
+            got = g.apply(ops, us, vs)
+            assert got.tolist() == exp, f"n_shards={n}: success bits diverge"
+    return graphs, oracle, rng
+
+
+# ---------------------------------------------------------------------------
+# routing unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_shard_id_is_hash_prefix():
+    """The shard id is literally the top log2(n) bits of the same 32-bit
+    hash whose low bits the probe sequence uses — no second hash."""
+    rng = np.random.default_rng(0)
+    us = rng.integers(0, 1 << 20, 256).astype(np.int32)
+    vs = rng.integers(0, 1 << 20, 256).astype(np.int32)
+    full = np.asarray(edge_hash32(us, vs)).astype(np.uint32)
+    for n, k in ((2, 1), (4, 2), (8, 3)):
+        got = sharding.shard_of_edges(us, vs, n)
+        assert np.array_equal(got, (full >> np.uint32(32 - k)).astype(np.int32))
+        assert got.min() >= 0 and got.max() < n
+    assert np.array_equal(
+        sharding.shard_of_edges(us, vs, 1), np.zeros(256, np.int32)
+    )
+
+
+def test_route_ops_rewrites_foreign_mutations_read_only():
+    """Every shard sees the full batch silhouette: vertex ops untouched,
+    owned edge mutations untouched, non-owned edge mutations rewritten to
+    OP_CONTAINS_EDGE (never dropped — conflict masks and claim priorities
+    must match in every shard)."""
+    rng = np.random.default_rng(1)
+    ops, us, vs = sample_batch(rng, 256, "traversal", key_space=KEY_SPACE)
+    for n in (2, 4):
+        shard_ops, owner = sharding.route_ops(ops, us, vs, n)
+        assert len(shard_ops) == n and owner.shape == ops.shape
+        is_emut = (ops == OP_ADD_EDGE) | (ops == OP_REMOVE_EDGE)
+        for s, so in enumerate(shard_ops):
+            assert so.shape == ops.shape
+            mine = is_emut & (owner == s)
+            assert np.array_equal(so[mine], ops[mine])  # owned: verbatim
+            foreign = is_emut & (owner != s)
+            assert (so[foreign] == OP_CONTAINS_EDGE).all()  # foreign: read-only
+            assert np.array_equal(so[~is_emut], ops[~is_emut])  # rest: verbatim
+        # each mutation is owned by exactly one shard
+        owned_counts = sum(
+            (so == ops) & is_emut for so in shard_ops
+        )
+        assert (owned_counts[is_emut] == 1).all()
+
+
+def test_shard_balance_histogram():
+    rng = np.random.default_rng(2)
+    ops, us, vs = sample_batch(rng, 4096, "traversal", key_space=100_000)
+    hist = shard_balance(ops, us, vs, 4)
+    assert hist.sum() == np.isin(
+        ops, (OP_ADD_EDGE, OP_REMOVE_EDGE, OP_CONTAINS_EDGE)
+    ).sum()
+    # uniform keys -> near-uniform prefixes (loose 2x bound, not a p-value)
+    assert hist.max() < 2 * max(1, hist.min())
+
+
+def test_fuse_single_shard_is_identity_and_state_property_guards():
+    g = WaitFreeGraph(64, 256)
+    g.apply(*initial_vertices(8))
+    csr = build_csr(g.state)
+    assert sharding.fuse_csrs([csr]) is csr
+    gs = WaitFreeGraph(64, 256, n_shards=2)
+    with pytest.raises(AttributeError):
+        gs.state
+    assert len(gs.shards) == 2
+
+
+def test_mesh_placement_roundtrip():
+    """place_shards is semantically a no-op (pure pytrees, host-local mesh)."""
+    states = sharding.make_shard_states(64, 64, 4)
+    placed = sharding.place_shards(states, sharding.host_local_mesh())
+    for a, b in zip(states, placed):
+        _assert_same_fields(a, b, "placement")
+
+
+# ---------------------------------------------------------------------------
+# the 50-churned-graph corpus: bit-identity across shard counts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["waitfree", "fpsp"])
+@pytest.mark.parametrize("seed", range(25))
+def test_corpus_bit_identity_across_shard_counts(mode, seed):
+    graphs, oracle, rng = _build_corpus_case(seed, mode)
+    g1 = graphs[1]
+    st1 = g1.state
+    csr1 = g1.traversal_csr()
+
+    for n in SHARD_COUNTS[1:]:
+        g = graphs[n]
+        # vertex replicas: byte-identical per shard AND to the 1-shard table
+        for s, sh in enumerate(g.shards):
+            for f in ("v_key", "v_live", "v_inc"):
+                assert np.array_equal(
+                    np.asarray(getattr(sh, f)), np.asarray(getattr(st1, f))
+                ), (n, s, f)
+        # fused CSR: everything except intra-row dst/lane order is byte-equal
+        fused = g.traversal_csr()
+        _assert_same_fields(fused, csr1, f"n_shards={n}", skip=("dst", "lane"))
+        # the (src, dst) edge multiset is identical (dst order within a row
+        # follows shard-lane provenance — layout, not content)
+        ne = int(csr1.n_edges)
+        assert int(fused.n_edges) == ne
+        p1 = np.lexsort((np.asarray(csr1.dst)[:ne], np.asarray(csr1.src)[:ne]))
+        pf = np.lexsort((np.asarray(fused.dst)[:ne], np.asarray(fused.src)[:ne]))
+        assert np.array_equal(
+            np.asarray(fused.dst)[:ne][pf], np.asarray(csr1.dst)[:ne][p1]
+        ), n
+        # abstract snapshot: all shard counts and the oracle agree
+        assert g.snapshot() == g1.snapshot() == (oracle.vertices, oracle.edges), n
+
+    # queries: byte-identical across shard counts, exact against the oracle
+    us_q, vs_q = sample_query_pairs(rng, 16, KEY_SPACE)
+    r1 = np.asarray(g1.reachable(us_q, vs_q))
+    assert r1.tolist() == [
+        oracle.reachable(int(a), int(b)) for a, b in zip(us_q, vs_q)
+    ]
+    bfs_src = [int(k) for k in us_q[:4]]
+    b1 = g1.bfs_batch(bfs_src)
+    p1 = g1.get_path_batch(us_q[:8], vs_q[:8])
+    for n in SHARD_COUNTS[1:]:
+        g = graphs[n]
+        assert np.array_equal(np.asarray(g.reachable(us_q, vs_q)), r1), n
+        assert g.bfs_batch(bfs_src) == b1, n
+        # parents ride scatter-min over identical slot numbering, so even
+        # the *choice* of shortest path is byte-identical, not just length
+        assert g.get_path_batch(us_q[:8], vs_q[:8]) == p1, n
+
+
+@pytest.mark.parametrize("mode", ["waitfree", "fpsp"])
+def test_delta_maintenance_matches_fused_rebuild(mode):
+    """csr_maintenance="delta" on a sharded graph: per-shard folds of the
+    routed batches fuse to exactly the fresh per-shard rebuild, chained
+    across update batches (rehash-free window)."""
+    rng = np.random.default_rng(11)
+    g = WaitFreeGraph(256, 1024, mode=mode, n_shards=4)
+    oracle = SequentialGraph()
+    for ops, us, vs in [initial_vertices(KEY_SPACE)] + [
+        sample_batch(rng, 96, "traversal", key_space=KEY_SPACE) for _ in range(2)
+    ]:
+        exp, _ = run_sequential(ops, us, vs, graph=oracle)
+        assert g.apply(ops, us, vs).tolist() == exp
+    g.traversal_csr()  # prime the per-shard delta bases
+    from repro.core.workloads import sample_update_batch
+
+    for i in range(4):
+        ops, us, vs = sample_update_batch(rng, 12, key_space=KEY_SPACE)
+        exp, _ = run_sequential(ops, us, vs, graph=oracle)
+        assert g.apply(ops, us, vs).tolist() == exp
+        fused = g.traversal_csr()  # one apply_delta per shard + fuse
+        fresh = sharding.fuse_csrs([build_csr(st) for st in g.shards])
+        _assert_same_fields(fused, fresh, f"batch {i}")
+        assert g.snapshot() == (oracle.vertices, oracle.edges)
+
+
+def test_sharded_growth_seeds_delta_queue_with_snapshot_compact():
+    """After a growth retry, each grown shard's pre-compacted snapshot
+    becomes that shard's delta base and the retried routed batch its queue
+    — the next query folds one batch per shard instead of rebuilding
+    (mirrors the 1-shard test in test_maintenance.py)."""
+    g = WaitFreeGraph(64, 128, n_shards=2, maintenance_impl="device")
+    g.traversal_csr()  # prime the cache
+    ops, us, vs = initial_vertices(300)  # forces growth mid-apply
+    g.apply(ops, us, vs)
+    assert g.shards[0].v_capacity > 64
+    assert g._csr is None and g._shard_csr_bases is not None
+    assert len(g._delta_batches) == 1
+    _assert_same_fields(
+        g.traversal_csr(),
+        sharding.fuse_csrs([build_csr(st) for st in g.shards]),
+        "folded",
+    )
+
+
+# ---------------------------------------------------------------------------
+# rehash at growth: synchronized vertex compaction, per-shard edge policy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["waitfree", "fpsp"])
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_growth_stress_keeps_replicas_aligned(mode, n_shards):
+    """Tiny initial tables force repeated doublings mid-workload: replicas
+    must stay byte-identical through every synchronized rehash round, the
+    per-shard CSRs must stay fusable (shared vertex slot space), and every
+    answer stays oracle-exact."""
+    seed = 1000 + ["waitfree", "fpsp"].index(mode) * 2 + n_shards
+    rng = np.random.default_rng(seed)
+    g = WaitFreeGraph(32, 32 * n_shards, mode=mode, n_shards=n_shards)
+    oracle = SequentialGraph()
+    for wave in range(4):
+        lo = 60 * wave
+        keys = np.arange(lo, lo + 60, dtype=np.int32)
+        batches = [
+            (np.full(60, OP_ADD_VERTEX, np.int32), keys, np.zeros(60, np.int32)),
+            (
+                np.full(20, OP_REMOVE_VERTEX, np.int32),
+                keys[rng.choice(60, 20, replace=False)],
+                np.zeros(20, np.int32),
+            ),
+            (
+                np.full(50, OP_ADD_EDGE, np.int32),
+                rng.integers(lo, lo + 60, 50).astype(np.int32),
+                rng.integers(0, lo + 60, 50).astype(np.int32),
+            ),
+        ]
+        for ops, us, vs in batches:
+            exp, _ = run_sequential(ops, us, vs, graph=oracle)
+            assert g.apply(ops, us, vs).tolist() == exp, wave
+        assert g.snapshot() == (oracle.vertices, oracle.edges), wave
+        ref = g.shards[0]
+        for s, sh in enumerate(g.shards[1:], 1):
+            for f in ("v_key", "v_live", "v_inc"):
+                assert np.array_equal(
+                    np.asarray(getattr(sh, f)), np.asarray(getattr(ref, f))
+                ), (wave, s, f)
+        fused = g.traversal_csr()
+        _assert_same_fields(
+            fused, sharding.fuse_csrs([build_csr(st) for st in g.shards]), wave
+        )
+        us_q, vs_q = sample_query_pairs(rng, 8, 60 * (wave + 1))
+        got = np.asarray(g.reachable(us_q, vs_q)).tolist()
+        assert got == [
+            oracle.reachable(int(a), int(b)) for a, b in zip(us_q, vs_q)
+        ], wave
+    assert g.shards[0].v_capacity >= 32 * 4  # >= 2 doublings actually happened

@@ -1,0 +1,71 @@
+"""Docs cross-link check: every relative markdown link must resolve.
+
+Run from the repo root (CI lint job does):
+
+    python tools/check_docs_links.py
+
+Scans README.md and docs/*.md for markdown link targets ``[text](target)``
+and fails if a relative target (no URL scheme, not a pure anchor) does not
+exist on disk, or escapes the repository (the CI badge URL is the one
+sanctioned escape — GitHub resolves it, the filesystem cannot).  Also
+enforces the two structural links this repo promises: README must point at
+both docs/ARCHITECTURE.md and docs/KERNELS.md.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\]\(([^)\s]+)\)")
+SCHEMES = ("http://", "https://", "mailto:")
+
+REQUIRED_IN_README = ("docs/ARCHITECTURE.md", "docs/KERNELS.md")
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(SCHEMES) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.is_relative_to(ROOT):
+            # the only sanctioned escape is the CI badge (GitHub resolves
+            # `../../actions/...` server-side); any other out-of-repo
+            # relative link is a typo that would 404 on GitHub
+            if "/actions/" not in target:
+                errors.append(
+                    f"{md.relative_to(ROOT)}: link escapes the repo -> {target}"
+                )
+            continue
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    errors = []
+    for md in files:
+        if not md.exists():
+            errors.append(f"missing file: {md.relative_to(ROOT)}")
+            continue
+        errors.extend(check_file(md))
+    readme = (ROOT / "README.md").read_text()
+    for required in REQUIRED_IN_README:
+        if required not in readme:
+            errors.append(f"README.md: missing required link to {required}")
+    for err in errors:
+        print(f"::error::{err}")
+    if not errors:
+        print(f"docs links OK ({len(files)} files checked)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
