@@ -47,15 +47,24 @@ cost, and the rebuild-vs-delta ratio.
 
 The ``n_shards`` column reports the hash-prefix shard count of the graph
 the row was measured on (``repro.core.sharding``).  Query rows sweep it —
-the batched engine answers against the *fused* cross-shard snapshot, and
-all shard counts must agree bit-for-bit (asserted).  Maintenance and rehash
-rows carry ``n_shards=1``: the refresh/rehash primitives are per-shard by
-construction (a sharded graph runs the same primitive once per shard), so
-the single-shard number *is* the per-shard cost.  See the README
+the batched engine answers against the *fused* cross-shard snapshot
+(``fuse_partitioned``: canonical vertex directory + per-shard edge
+validation), and all shard counts must agree bit-for-bit (asserted).
+Maintenance rows come in both flavors: ``n_shards=1`` rows time the
+per-shard primitives in isolation (rebuild / delta folds / one-table
+rehash), and ``n_shards>1`` rows time the sharded pipeline end to end —
+``rebuild_fused`` is the fused cross-shard refresh, ``rehash_host`` at
+``n_shards>1`` doubles every shard against the shared gathered-endpoint
+index (``rehash(..., endpoints=...)``).  ``peak_bytes`` is the largest
+single shard's table footprint (bytes of its live arrays): the partitioned
+design's O(N/S) memory claim as a measured column — it should fall ~1/S as
+``n_shards`` rises on the same abstract graph.  See the README
 "Benchmarks" section for how to read the CSV and ``BENCH_maintenance.json``.
 
 Usage:  python benchmarks/graph_reachability.py [--quick] [--kernels]
-Output: CSV rows on stdout (bench,engine,impl,build,graph_size,batch,n_shards,...).
+Output: CSV rows on stdout
+        (bench,engine,impl,build,graph_size,batch,n_shards,snap_ms,
+        us_per_query,peak_bytes).
 """
 
 from __future__ import annotations
@@ -101,10 +110,23 @@ def _build_graph(
 
 def _snap_csr(g: WaitFreeGraph):
     """The full snapshot-compaction pass: build_csr for a 1-shard graph,
-    per-shard builds + cross-shard fusion for a sharded one."""
+    directory placement + partitioned fusion for a sharded one."""
     if g.n_shards == 1:
         return traversal.build_csr(g.state)
-    return sharding.fuse_csrs([traversal.build_csr(st) for st in g.shards])
+    return sharding.fuse_partitioned(g.shards)
+
+
+def _graph_state_bytes(st) -> int:
+    return int(sum(np.asarray(a).nbytes for a in st))
+
+
+def _peak_shard_bytes(g: WaitFreeGraph) -> int:
+    """Peak per-shard table footprint: bytes of the largest shard's live
+    arrays.  The partitioned design's O(N/S) claim in one number — at a
+    fixed abstract graph this column should fall ~1/S as n_shards rises
+    (modulo the power-of-two capacity floor)."""
+    states = g.shards if g.n_shards > 1 else [g.state]
+    return max(_graph_state_bytes(st) for st in states)
 
 
 def _bench_snap(g: WaitFreeGraph):
@@ -219,6 +241,52 @@ def _bench_rehash(g: WaitFreeGraph, timed: int, kernels: bool = False) -> Dict[s
     return out
 
 
+def _bench_sharded_maintenance(
+    key_space: int, mode: str, update_batch: int, n_batches: int, seed: int,
+    n_shards: int,
+):
+    """The sharded counterparts of the maintenance rows: snapshot refresh is
+    a fused per-shard rebuild (``fuse_partitioned`` — directory placement +
+    per-shard edge validation), growth rehash doubles every shard against
+    the shared gathered-endpoint index (``rehash(..., endpoints=...)``).
+    Reported ms are totals across all shards, so they compare directly to
+    the 1-shard rows on the same abstract graph."""
+    g = _build_graph(key_space, mode, seed, n_shards)
+    rng = np.random.default_rng(seed + 2)
+    jax.block_until_ready(sharding.fuse_partitioned(g.shards).src)  # warmup
+    t_refresh = 0.0
+    for _ in range(n_batches):
+        ops, us, vs = sample_update_batch(rng, update_batch, key_space)
+        g.apply(ops, us, vs)
+        t0 = time.perf_counter()
+        csr = sharding.fuse_partitioned(g.shards)
+        jax.block_until_ready(csr.src)
+        t_refresh += time.perf_counter() - t0
+
+    endpoints = sharding.gather_live_vertices(g.shards)
+
+    def grow_all():
+        for st in g.shards:
+            s, _, ok = maintenance.rehash(
+                st, 2 * st.v_capacity, 2 * st.e_capacity,
+                impl="host", endpoints=endpoints,
+            )
+            assert ok
+            jax.block_until_ready(s.v_key)
+
+    grow_all()  # warmup / compile
+    t0 = time.perf_counter()
+    grow_all()
+    t_rehash = time.perf_counter() - t0
+    return (
+        {
+            "rebuild_fused": 1e3 * t_refresh / n_batches,
+            "rehash_host": 1e3 * t_rehash,
+        },
+        g,
+    )
+
+
 def run(
     graph_sizes=GRAPH_SIZES,
     batches=QUERY_BATCHES,
@@ -245,6 +313,7 @@ def run(
             for n_shards in shard_counts:
                 g = _build_graph(key_space, mode, seed, n_shards)
                 rng = np.random.default_rng(seed + 1)
+                pb = _peak_shard_bytes(g)
                 snap_b, csr = _bench_snap(g)
                 for n in batches:
                     pairs = sample_query_pairs(rng, n, key_space)
@@ -255,7 +324,8 @@ def run(
                                          graph_size=key_space, batch=n,
                                          n_shards=n_shards,
                                          snap_ms=1e3 * snap_b,
-                                         us_per_query=1e6 * dt_b / n))
+                                         us_per_query=1e6 * dt_b / n,
+                                         peak_bytes=pb))
                         if ref_out is None:
                             ref_out = out_b
                         else:
@@ -276,7 +346,8 @@ def run(
                                      graph_size=key_space, batch=n,
                                      n_shards=n_shards,
                                      snap_ms=1e3 * snap_o,
-                                     us_per_query=1e6 * dt_o / n))
+                                     us_per_query=1e6 * dt_o / n,
+                                     peak_bytes=pb))
             # rebuild-vs-delta maintenance on the update-light mix; the
             # update-batch sweep exposes what each refresh scales with
             # (the device merge should track batch size, the host splice
@@ -284,6 +355,7 @@ def run(
             # the refresh primitives are per-shard by construction, so the
             # single-shard number is the per-shard cost.
             g = _build_graph(key_space, mode, seed)
+            pb1 = _peak_shard_bytes(g)
             for update_batch in update_batches:
                 maint = _bench_maintenance(
                     key_space, mode, update_batch, maint_batches, seed,
@@ -294,7 +366,8 @@ def run(
                                      graph_size=key_space, batch=update_batch,
                                      n_shards=1,
                                      snap_ms=snap_ms,
-                                     us_per_query=1e3 * snap_ms / MAINT_QUERY_WINDOW))
+                                     us_per_query=1e3 * snap_ms / MAINT_QUERY_WINDOW,
+                                     peak_bytes=pb1))
             # growth rehash: host claim rounds vs device compaction pipeline
             for policy, snap_ms in _bench_rehash(
                 g, max(2, timed // 4), kernels=kernels
@@ -303,7 +376,27 @@ def run(
                                  graph_size=key_space, batch=0,
                                  n_shards=1,
                                  snap_ms=snap_ms,
-                                 us_per_query=1e3 * snap_ms / MAINT_QUERY_WINDOW))
+                                 us_per_query=1e3 * snap_ms / MAINT_QUERY_WINDOW,
+                                 peak_bytes=pb1))
+            # the sharded counterparts: fused refresh + endpoint-indexed
+            # per-shard rehash, peak_bytes showing the O(N/S) footprint
+            s_last = shard_counts[-1]
+            if s_last > 1:
+                maint_s, gs = _bench_sharded_maintenance(
+                    key_space, mode, update_batches[0], maint_batches, seed,
+                    s_last,
+                )
+                pbs = _peak_shard_bytes(gs)
+                for policy, snap_ms in maint_s.items():
+                    rows.append(dict(engine="maintenance", impl=policy,
+                                     build=mode, graph_size=key_space,
+                                     batch=0 if policy.startswith("rehash")
+                                     else update_batches[0],
+                                     n_shards=s_last,
+                                     snap_ms=snap_ms,
+                                     us_per_query=1e3 * snap_ms
+                                     / MAINT_QUERY_WINDOW,
+                                     peak_bytes=pbs))
     return rows
 
 
@@ -324,12 +417,13 @@ def main(argv=None):
         update_batches=(8, 64) if quick else (8, 32, 128),
         shard_counts=(1, 2) if quick else (1, 4),
     )
-    print("bench,engine,impl,build,graph_size,batch,n_shards,snap_ms,us_per_query")
+    print("bench,engine,impl,build,graph_size,batch,n_shards,snap_ms,"
+          "us_per_query,peak_bytes")
     for r in rows:
         print(
             f"graph_reachability,{r['engine']},{r['impl']},{r['build']},"
             f"{r['graph_size']},{r['batch']},{r['n_shards']},{r['snap_ms']:.3f},"
-            f"{r['us_per_query']:.2f}"
+            f"{r['us_per_query']:.2f},{r['peak_bytes']}"
         )
     # the maintenance trajectory, machine-readable (CI uploads it next to
     # the CSV artifact)

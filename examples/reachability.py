@@ -129,9 +129,11 @@ print(f"growth {pre_caps} -> {(g.state.v_capacity, g.state.e_capacity)}: "
       f"device rehash + snapshot-compact, post-growth snapshot exact")
 
 # hash-prefix sharding (repro.core.sharding): the same op stream through a
-# 4-shard graph — edge table partitioned by the prefix of the probe hash,
-# vertex table deterministically replicated — answers every query
-# byte-identically to the 1-shard graph, against one fused CSR snapshot
+# 4-shard graph — BOTH tables partitioned by the prefix of their probe
+# hashes (each shard stores only owned rows, O(N/S) + O(M/S)); the batch is
+# routed as disjoint sub-batches and a cross-shard stabbing wave carries
+# endpoint liveness to edge ops — yet every query answers identically to
+# the 1-shard graph, against one fused (directory-placed) CSR snapshot
 from repro.core.workloads import shard_balance
 
 rng = np.random.default_rng(13)

@@ -160,25 +160,33 @@ def _vertex_wave(state: GraphState, batch: OpBatch):
 # B. stabbing wave: endpoint (live, inc) at each edge op's phase
 # ---------------------------------------------------------------------------
 
-def _stabbing_wave(state: GraphState, batch: OpBatch, is_eop, ev_live, ev_inc, is_vop):
-    op, u, v, phase = batch.op, batch.u, batch.v, batch.phase
-    n = op.shape[0]
+def _stab_scan(state: GraphState, tkeys, tphases, t_set, ev_live, ev_inc, qkeys, qphases):
+    """The core stabbing scan: merge vertex-transition events ``(tkeys,
+    tphases)`` carrying post-op payloads ``(ev_live, ev_inc)`` with endpoint
+    queries ``(qkeys, qphases)``, sort by (key, phase), and answer every
+    query with its key's (live, inc) *at its phase* via one head-seeded
+    last-set scan.  Inert lanes carry the INT32_MAX key sentinel.  Returns
+    ``(q_live, q_inc, overflow)`` aligned with the query arrays.
 
-    # Event list (3n): vertex transitions + u-queries + v-queries of edge ops.
-    tkey = jnp.where(is_vop, u, _INT32_MAX)
-    qukey = jnp.where(is_eop, u, _INT32_MAX)
-    qvkey = jnp.where(is_eop, v, _INT32_MAX)
-    ekey = jnp.concatenate([tkey, qukey, qvkey])
-    ephase = jnp.concatenate([phase, phase, phase])
-    is_set = jnp.concatenate([is_vop, jnp.zeros((2 * n,), bool)])
+    This is the paper's Fig. 3 stabbing discipline as a standalone pass: the
+    monolithic :func:`apply_batch` feeds it the batch's own endpoint queries,
+    and the partitioned pipeline (:mod:`repro.core.sharding`) feeds the owner
+    shard's transitions with *remote* shards' endpoint queries — same scan,
+    same semantics, so cross-shard answers match the replicated ones.
+    """
+    nt = tkeys.shape[0]
+    nq = qkeys.shape[0]
+    ekey = jnp.concatenate([tkeys, qkeys])
+    ephase = jnp.concatenate([tphases, qphases])
+    is_set = jnp.concatenate([t_set, jnp.zeros((nq,), bool)])
 
     # every event knows its key's initial table state (for segment heads)
     loc = locate_vertices(state.v_key, ekey, ekey != _INT32_MAX)
     init_live = jnp.where(loc.found, state.v_live[jnp.where(loc.found, loc.slot, 0)], False)
     init_inc = jnp.where(loc.found, state.v_inc[jnp.where(loc.found, loc.slot, 0)], ABSENT_INC)
 
-    pay_live = jnp.concatenate([ev_live, jnp.zeros((2 * n,), bool)])
-    pay_inc = jnp.concatenate([ev_inc, jnp.zeros((2 * n,), jnp.int32)])
+    pay_live = jnp.concatenate([ev_live, jnp.zeros((nq,), bool)])
+    pay_inc = jnp.concatenate([ev_inc, jnp.zeros((nq,), jnp.int32)])
 
     perm, (s_key, s_set, s_pl, s_pi, s_il, s_ii) = _sort_by(
         (ekey, ephase), ekey, is_set, pay_live, pay_inc, init_live, init_inc
@@ -194,24 +202,34 @@ def _stabbing_wave(state: GraphState, batch: OpBatch, is_eop, ev_live, ev_inc, i
     (scan_live, scan_inc), _ = scan_last_set((val_live, val_inc), val_set)
 
     # read back query results in original order
-    out_live = jnp.zeros((3 * n,), bool).at[perm].set(scan_live)
-    out_inc = jnp.zeros((3 * n,), jnp.int32).at[perm].set(scan_inc)
-    u_live, u_inc = out_live[n : 2 * n], out_inc[n : 2 * n]
-    v_live, v_inc = out_live[2 * n :], out_inc[2 * n :]
+    out_live = jnp.zeros((nt + nq,), bool).at[perm].set(scan_live)
+    out_inc = jnp.zeros((nt + nq,), jnp.int32).at[perm].set(scan_inc)
+    return out_live[nt:], out_inc[nt:], loc.overflow
 
-    # note: the locate above re-walks chains after the vertex wave may have
-    # inserted keys — that is correct: init state must reflect the *updated*
-    # table for keys first created in this batch (their init is the vertex
-    # wave's final state; but head queries preceding any transition need the
-    # *pre-batch* init).  Resolve: a head query's key had no in-batch vertex
-    # transition *before it*; if the key is brand-new this batch, the table
-    # lookup now finds the inserted (final) state.  Guard: treat init as
-    # absent for keys whose first event is a query but whose slot was created
-    # this batch.  We detect this via inc: pre-batch tombstones/live have
-    # inc >= 0 only if they existed; created-this-batch keys are exactly those
-    # found now but not found in the vertex wave.  Rather than thread that
-    # bit, we pass the *pre-wave* table into this function (see apply_batch).
-    return (u_live, u_inc, v_live, v_inc), loc.overflow
+
+def _stabbing_wave(state: GraphState, batch: OpBatch, is_eop, ev_live, ev_inc, is_vop):
+    op, u, v, phase = batch.op, batch.u, batch.v, batch.phase
+    n = op.shape[0]
+
+    # Event list (3n): vertex transitions + u-queries + v-queries of edge ops
+    # (the concat order is load-bearing: the stable lexsort's tie-breaks — and
+    # therefore the 1-shard bit-identity — depend on it).
+    tkey = jnp.where(is_vop, u, _INT32_MAX)
+    qukey = jnp.where(is_eop, u, _INT32_MAX)
+    qvkey = jnp.where(is_eop, v, _INT32_MAX)
+    qkeys = jnp.concatenate([qukey, qvkey])
+    qphases = jnp.concatenate([phase, phase])
+
+    # note: the locate inside _stab_scan re-walks chains after the vertex
+    # wave may have inserted keys — init state must reflect the *pre-batch*
+    # table (head queries precede all in-batch transitions of their key), so
+    # apply_batch passes the pre-wave table into this function.
+    q_live, q_inc, overflow = _stab_scan(
+        state, tkey, phase, is_vop, ev_live, ev_inc, qkeys, qphases
+    )
+    u_live, u_inc = q_live[:n], q_inc[:n]
+    v_live, v_inc = q_live[n:], q_inc[n:]
+    return (u_live, u_inc, v_live, v_inc), overflow
 
 
 # ---------------------------------------------------------------------------
@@ -338,3 +356,75 @@ def apply_batch(state: GraphState, batch: OpBatch) -> ApplyResult:
         [jnp.int32(0), jnp.int32(0), jnp.int32(0), (v_ins + e_ins).astype(jnp.int32)]
     )
     return ApplyResult(state=state, success=success, ok=ok, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# phase entry points for the partitioned (cross-shard) pipeline
+# ---------------------------------------------------------------------------
+#
+# The sharded graph (repro.core.sharding / WaitFreeGraph n_shards > 1) runs
+# the same three waves as apply_batch, but split across shards with a
+# host-gathered stab exchange in the middle:
+#
+#   settle_vertices  — per shard, over its *owned* vertex ops only;
+#   answer_stabs     — per endpoint-owner shard, answering remote shards'
+#                      (endpoint, phase) queries against its own transitions;
+#   settle_edges     — per shard, over its owned edge ops, fed the gathered
+#                      endpoint answers.
+#
+# Each is an independently jitted pass so per-shard sub-batches (different
+# bucket sizes per shard) compile once per bucket, exactly like apply_batch.
+
+
+@jax.jit
+def settle_vertices(state: GraphState, batch: OpBatch):
+    """Vertex wave as a standalone pass.  Returns ``(state', results,
+    ev_live, ev_inc, overflow)`` — the ev arrays are the per-lane post-op
+    (live, inc) transition payloads the stabbing wave consumes."""
+    state, results, (ev_live, ev_inc), overflow, _ = _vertex_wave(state, batch)
+    return state, results, ev_live, ev_inc, overflow
+
+
+@jax.jit
+def answer_stabs(
+    pre_state: GraphState,
+    batch: OpBatch,
+    ev_live: jnp.ndarray,
+    ev_inc: jnp.ndarray,
+    qkeys: jnp.ndarray,
+    qphases: jnp.ndarray,
+):
+    """Answer endpoint (live, inc)-at-phase queries against this shard's
+    vertex transitions.
+
+    ``pre_state`` must be the shard's *pre-vertex-wave* table (head queries
+    precede every in-batch transition of their key, so their seed is the
+    pre-batch state); ``batch``/``ev_live``/``ev_inc`` are the shard's own
+    sub-batch and the transition payloads :func:`settle_vertices` returned
+    for it.  ``qkeys``/``qphases`` are the gathered queries (INT32_MAX lanes
+    are inert padding).  Returns ``(live, inc, overflow)`` per query."""
+    op, u = batch.op, batch.u
+    is_vop = (op == OP_ADD_VERTEX) | (op == OP_REMOVE_VERTEX) | (op == OP_CONTAINS_VERTEX)
+    tkey = jnp.where(is_vop, u, _INT32_MAX)
+    return _stab_scan(
+        pre_state, tkey, batch.phase, is_vop, ev_live, ev_inc, qkeys, qphases
+    )
+
+
+@jax.jit
+def settle_edges(
+    state: GraphState,
+    batch: OpBatch,
+    u_live: jnp.ndarray,
+    u_inc: jnp.ndarray,
+    v_live: jnp.ndarray,
+    v_inc: jnp.ndarray,
+):
+    """Edge wave as a standalone pass, fed externally gathered endpoint
+    answers.  Returns ``(state', results, overflow)``."""
+    op = batch.op
+    is_eop = (op == OP_ADD_EDGE) | (op == OP_REMOVE_EDGE) | (op == OP_CONTAINS_EDGE)
+    state, results, overflow, _ = _edge_wave(
+        state, batch, is_eop, (u_live, u_inc, v_live, v_inc)
+    )
+    return state, results, overflow

@@ -21,12 +21,12 @@ by the full wait-free engine with the fast ops masked to NOPs.  Both paths
 are bounded, so the hybrid is still wait-free, and `lax.cond` skips the slow
 pass entirely when a batch is conflict-free.
 
-The conflict mask is a pure function of the batch silhouette (op kinds,
-keys, endpoints) — which is why hash-prefix sharding
-(:mod:`repro.core.sharding`) rewrites non-owned edge mutations to
-read-only ops instead of dropping them: every shard computes the identical
-mask, takes the identical fast/slow path per op, and the vertex replicas
-stay byte-identical.  Paper-to-code map: ``docs/ARCHITECTURE.md``.
+Under hash-prefix sharding (:mod:`repro.core.sharding`) each shard's
+sub-batch holds only its owned ops, and endpoint liveness arrives from the
+cross-shard stabbing wave instead of the local table; the partitioned FPSP
+entry point is :func:`settle_edges_fpsp`, whose conflict mask reduces to
+duplicate ``(u, v)`` detection because the stab answers already fold in
+every concurrent vertex op.  Paper-to-code map: ``docs/ARCHITECTURE.md``.
 """
 
 from __future__ import annotations
@@ -219,6 +219,101 @@ def _fast_apply(state: GraphState, batch: OpBatch, fast: jnp.ndarray):
     success = jnp.where(fv, v_success, jnp.where(fe, e_success, False))
     overflow = vloc.overflow | uloc.overflow | vloc2.overflow | eloc.overflow | v_over | e_over
     return state, success, overflow
+
+
+def _fast_apply_edges(state: GraphState, batch: OpBatch, fe, endpoint):
+    """The edge half of :func:`_fast_apply`, fed externally settled endpoint
+    (live, inc)-at-phase answers instead of table reads.
+
+    Under vertex partitioning (:mod:`repro.core.sharding`) a shard cannot
+    read non-owned endpoints from its local table — the stabbing wave's
+    answers replace that read, and they are exact *at each op's phase*, so
+    the fast-path precondition shrinks to "``(u, v)`` unique among this
+    shard's edge ops" (concurrent vertex ops no longer disqualify a lane:
+    their effect is already folded into the answers)."""
+    op, u, v = batch.op, batch.u, batch.v
+    u_live, u_inc, v_live, v_inc = endpoint
+    eligible = u_live & v_live & fe
+
+    eloc = locate_edges(
+        state.e_key_u, state.e_key_v,
+        jnp.where(fe, u, _INT32_MAX), jnp.where(fe, v, _INT32_MAX), fe,
+    )
+    esafe = jnp.where(eloc.found, eloc.slot, 0)
+    e_valid = (
+        eloc.found
+        & state.e_live[esafe]
+        & (state.e_inc_u[esafe] == u_inc)
+        & (state.e_inc_v[esafe] == v_inc)
+        & eligible
+    )
+
+    adde = fe & (op == OP_ADD_EDGE)
+    reme = fe & (op == OP_REMOVE_EDGE)
+    cone = fe & (op == OP_CONTAINS_EDGE)
+    e_success = (adde & eligible & ~e_valid) | ((reme | cone) & e_valid)
+
+    ecap = state.e_key_u.shape[0]
+    ewr = (adde | reme) & e_success & eloc.found
+    ewslot = jnp.where(ewr, eloc.slot, ecap)
+    e_live_new = state.e_live.at[ewslot].set(adde & e_success, mode="drop")
+    e_bu_new = state.e_inc_u.at[ewslot].set(u_inc, mode="drop")
+    e_bv_new = state.e_inc_v.at[ewslot].set(v_inc, mode="drop")
+
+    e_need_ins = adde & e_success & ~eloc.found
+    e_ku_new, e_kv_new, e_new_slots, e_over = claim_edge_slots(
+        state.e_key_u, state.e_key_v,
+        jnp.where(e_need_ins, u, _INT32_MAX), jnp.where(e_need_ins, v, _INT32_MAX),
+        e_need_ins,
+    )
+    eislot = jnp.where(e_need_ins & (e_new_slots >= 0), e_new_slots, ecap)
+    e_live_new = e_live_new.at[eislot].set(True, mode="drop")
+    e_bu_new = e_bu_new.at[eislot].set(u_inc, mode="drop")
+    e_bv_new = e_bv_new.at[eislot].set(v_inc, mode="drop")
+
+    state = state._replace(
+        e_key_u=e_ku_new, e_key_v=e_kv_new,
+        e_live=e_live_new, e_inc_u=e_bu_new, e_inc_v=e_bv_new,
+    )
+    return state, e_success, eloc.overflow | e_over
+
+
+@jax.jit
+def settle_edges_fpsp(
+    state: GraphState,
+    batch: OpBatch,
+    u_live: jnp.ndarray,
+    u_inc: jnp.ndarray,
+    v_live: jnp.ndarray,
+    v_inc: jnp.ndarray,
+):
+    """FPSP twin of :func:`repro.core.engine.settle_edges` for the
+    partitioned pipeline: edge ops whose ``(u, v)`` is unique in this
+    shard's sub-batch take the sort-free direct path (the stab answers
+    stand in for the endpoint table reads), and only duplicate-key groups
+    pay the phase-ordered epoch scan.  Returns ``(state', results,
+    overflow)``, exactly the FPSP conflict semantics on the sub-batch."""
+    op = batch.op
+    is_eop = (op == OP_ADD_EDGE) | (op == OP_REMOVE_EDGE) | (op == OP_CONTAINS_EDGE)
+    conflicted = is_eop & _edge_dup_mask(batch.u, batch.v, is_eop)
+    fast = is_eop & ~conflicted
+    endpoint = (u_live, u_inc, v_live, v_inc)
+
+    state, fast_success, fast_over = _fast_apply_edges(state, batch, fast, endpoint)
+
+    n_conf = jnp.sum(conflicted).astype(jnp.int32)
+
+    def slow(st):
+        masked = batch._replace(op=jnp.where(conflicted, batch.op, OP_NOP))
+        is_eop_m = conflicted
+        return engine._edge_wave(st, masked, is_eop_m, endpoint)[:3]
+
+    def skip(st):
+        return st, jnp.zeros((batch.size,), bool), jnp.array(False)
+
+    state, slow_success, slow_over = jax.lax.cond(n_conf > 0, slow, skip, state)
+    success = jnp.where(fast, fast_success, slow_success)
+    return state, success, fast_over | slow_over
 
 
 @jax.jit

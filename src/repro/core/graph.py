@@ -26,6 +26,7 @@ import numpy as np
 
 from . import engine, fastpath, maintenance, sharding, traversal
 from .types import (
+    EDGE_OPS,
     EMPTY_KEY,
     GROW_LOAD_FACTOR,
     OP_ADD_EDGE,
@@ -35,10 +36,13 @@ from .types import (
     OP_REMOVE_EDGE,
     OP_REMOVE_VERTEX,
     GraphState,
+    OpBatch,
     is_pow2,
     make_batch,
     make_state,
 )
+
+_INT32_MAX = np.iinfo(np.int32).max
 
 _MAX_GROW_ATTEMPTS = 12
 
@@ -126,14 +130,19 @@ class WaitFreeGraph:
     auto: device on TPU, host elsewhere.  All impls produce bit-identical
     tables, so the flag is purely a performance knob.
 
-    ``n_shards`` hash-prefix-partitions the edge table into that many
-    per-shard states (vertex table deterministically replicated, edge ops
-    routed by the prefix of the hash the probe sequence already uses — see
-    :mod:`repro.core.sharding`), round-robined over ``mesh`` (default: a
-    host-local :func:`repro.core.sharding.host_local_mesh`).  ``n_shards=1``
-    (the default) bypasses the routing layer entirely; any shard count
-    produces byte-identical query results (pinned by
-    ``tests/test_sharding.py``), so the flag is a pure scaling knob.
+    ``n_shards`` hash-prefix-partitions *both* tables into that many
+    per-shard states — each shard owns ``1/n_shards`` of the vertex key
+    space and of the edge key space (O(N/S) memory per shard), with ops
+    routed by the prefix of the hash the probe sequence already uses and a
+    cross-shard stabbing wave answering endpoint liveness between the
+    vertex and edge settlement phases (see :mod:`repro.core.sharding`) —
+    round-robined over ``mesh`` (default: a host-local
+    :func:`repro.core.sharding.host_local_mesh`).  ``n_shards=1`` (the
+    default) bypasses the routing layer entirely; any shard count produces
+    identical query answers (pinned by ``tests/test_sharding.py``), so the
+    flag is a pure scaling knob.  The incremental ``csr_maintenance=
+    "delta"`` fold applies to 1-shard graphs only; sharded snapshots are
+    rebuilt via :func:`repro.core.sharding.fuse_partitioned` on demand.
     """
 
     def __init__(
@@ -153,8 +162,6 @@ class WaitFreeGraph:
         assert is_pow2(n_shards), "n_shards must be a power of two"
         self._csr: Optional[traversal.TraversalCSR] = None  # cached snapshot
         self._grow_csr: Optional[traversal.TraversalCSR] = None
-        self._grow_shard_csrs: Optional[List[traversal.TraversalCSR]] = None
-        self._shard_csr_bases: Optional[List[traversal.TraversalCSR]] = None
         self.n_shards = n_shards
         self._mesh = None
         if n_shards == 1:
@@ -163,9 +170,14 @@ class WaitFreeGraph:
             assert e_capacity % n_shards == 0 and is_pow2(e_capacity // n_shards), (
                 "e_capacity must split into power-of-two per-shard capacities"
             )
+            assert v_capacity % n_shards == 0 and is_pow2(v_capacity // n_shards), (
+                "v_capacity must split into power-of-two per-shard capacities"
+            )
             self._mesh = mesh if mesh is not None else sharding.host_local_mesh()
             self.shards = sharding.place_shards(
-                sharding.make_shard_states(v_capacity, e_capacity // n_shards, n_shards),
+                sharding.make_shard_states(
+                    v_capacity // n_shards, e_capacity // n_shards, n_shards
+                ),
                 self._mesh,
             )
         self.mode = mode
@@ -179,7 +191,7 @@ class WaitFreeGraph:
         if self.n_shards > 1:
             raise AttributeError(
                 "sharded graph: per-shard states live on .shards "
-                "(vertex columns are replicas; edge tables are partitions)"
+                "(both tables are hash-prefix partitions)"
             )
         return self._state
 
@@ -199,12 +211,11 @@ class WaitFreeGraph:
 
     @shards.setter
     def shards(self, value) -> None:
-        # same invalidation contract as the ``state`` setter, for the
-        # sharded snapshot bookkeeping (fused cache + per-shard delta bases)
+        # same invalidation contract as the ``state`` setter (the fused
+        # snapshot is rebuilt from scratch — the delta fold is 1-shard only)
         self._shards = list(value)
         self._csr = None
         self._delta_base = None
-        self._shard_csr_bases = None
         self._delta_batches = []
 
     # -- batched API ------------------------------------------------------
@@ -328,137 +339,199 @@ class WaitFreeGraph:
 
     # -- hash-prefix sharded apply (see repro.core.sharding) ----------------
 
-    def _apply_sharded(self, ops0, us0, vs0) -> np.ndarray:
-        """The n_shards > 1 twin of ``apply``: route the batch, run every
-        shard's engine pass (full batch shape, non-owned edge mutations
-        rewritten read-only — the replica invariant), gather per-lane
-        results from the owner shards, and grow transactionally on any
-        shard's overflow.  Linearization is unchanged: one phase window per
-        batch, shared by every shard.
+    @staticmethod
+    def _sub_batch(ops0, us0, vs0, phases0, idx) -> OpBatch:
+        """Compact one shard's owned lanes into a pow2-bucketed sub-batch.
+        Lanes keep their *global* phase stamps (linearization = batch
+        order, shard-count-independent); padding lanes are NOPs, inert in
+        every wave (their keys sort to the INT32_MAX sentinel)."""
+        m = idx.size
+        bucket = _bucket_size(m)
+        op = np.zeros(bucket, np.int32)
+        u = np.zeros(bucket, np.int32)
+        v = np.zeros(bucket, np.int32)
+        ph = np.zeros(bucket, np.int32)
+        op[:m] = ops0[idx]
+        u[:m] = us0[idx]
+        v[:m] = vs0[idx]
+        ph[:m] = phases0[idx]
+        return OpBatch(
+            op=jnp.asarray(op), u=jnp.asarray(u), v=jnp.asarray(v),
+            phase=jnp.asarray(ph),
+        )
 
-        The snapshot bookkeeping below deliberately mirrors ``apply``'s
-        state machine step for step (saved snapshot on read-only batches,
-        delta-queue append with a footprint floor, growth seeding on
-        attempt > 0) — when editing either twin, port the change to the
-        other; only the queue-entry layout differs (routed per-shard op
-        arrays here, one op array there) plus the floor, which takes the
-        *minimum* shard e-capacity since every shard must stay foldable."""
+    def _apply_sharded(self, ops0, us0, vs0) -> np.ndarray:
+        """The n_shards > 1 twin of ``apply``: the partitioned three-phase
+        pipeline (route → vertex settle → stab → gather → edge claim).
+
+        Each shard receives only its owned lanes (O(batch/S) sub-batches —
+        no silhouette replication), so the phases are explicit:
+
+          A. ``settle_vertices`` per shard — each shard's vertex wave over
+             its owned vertex ops, returning per-lane transition payloads;
+          B. ``answer_stabs`` per endpoint-owner shard — every edge lane's
+             two (endpoint, phase) queries are routed to the endpoint's
+             owner, answered against its transitions + pre-batch table,
+             and gathered host-side (the all-to-all exchange);
+          C. ``settle_edges`` (or its FPSP twin) per shard — the unchanged
+             edge wave over owned edge ops, fed the gathered answers.
+
+        Linearization is unchanged: lanes carry globally unique phase
+        stamps, every vertex op on a key lives on one shard (so its
+        transition sequence is complete there), and the stab answers are
+        exactly what the monolithic engine's in-batch stabbing wave would
+        have computed.  Growth is transactional per attempt, as in
+        ``apply``: any overflow discards the post-states, grows from the
+        pre-states, and re-runs the same batch at the same phases."""
         n = ops0.shape[0]
+        S = self.n_shards
         mutating = bool(np.isin(ops0, _MUTATING_OPS).any())
         saved_csr = None if mutating else self._csr
-        delta_bases, delta_batches = self._shard_csr_bases, self._delta_batches
-        if mutating and self.csr_maintenance == "delta" and self._csr is not None:
-            delta_bases, delta_batches = self._shard_csr_bases, []
-        shard_ops, owner = sharding.route_ops(ops0, us0, vs0, self.n_shards)
-        bucket = _bucket_size(n)
-        pad = np.zeros(bucket - n, np.int32)
-        us_p = np.concatenate([us0, pad])
-        vs_p = np.concatenate([vs0, pad])
+        shard_idx, _ = sharding.route_ops(ops0, us0, vs0, S)
+        phases0 = (self._phase + np.arange(n)).astype(np.int32)
+        self._phase += n
         batches = [
-            make_batch(np.concatenate([so, pad]), us_p, vs_p, phase_base=self._phase)
-            for so in shard_ops
+            self._sub_batch(ops0, us0, vs0, phases0, idx) for idx in shard_idx
         ]
-        self._phase += bucket
-        apply_fn = engine.apply_batch if self.mode == "waitfree" else fastpath.apply_batch_fpsp
 
-        self._grow_shard_csrs = None
-        for attempt in range(_MAX_GROW_ATTEMPTS):
+        # stab queries: two (endpoint, phase) probes per edge lane, routed
+        # to the endpoint's owner shard (fixed across growth attempts —
+        # growth preserves the abstract graph, so answers are identical)
+        eidx = np.flatnonzero(np.isin(ops0, EDGE_OPS))
+        ne = eidx.size
+        q_keys = np.concatenate([us0[eidx], vs0[eidx]]).astype(np.int32)
+        q_phases = np.concatenate([phases0[eidx], phases0[eidx]])
+        q_owner = sharding.shard_of_vertices(q_keys, S)
+        q_sel = [np.flatnonzero(q_owner == t) for t in range(S)]
+        q_pads = [
+            (
+                traversal._pad_pow2(q_keys[sel], _INT32_MAX),
+                traversal._pad_pow2(q_phases[sel], 0),
+            )
+            for sel in q_sel
+        ]
+        settle_edges_fn = (
+            engine.settle_edges if self.mode == "waitfree"
+            else fastpath.settle_edges_fpsp
+        )
+
+        for _attempt in range(_MAX_GROW_ATTEMPTS):
             pre = self._shards  # kept alive for transactional retry
-            results = [apply_fn(st, b) for st, b in zip(pre, batches)]
-            states = [r.state for r in results]
-            if all(bool(r.ok) for r in results) and not self._needs_growth_sharded(states):
-                grow_csrs = self._grow_shard_csrs
-                self.shards = states
-                # vertex lanes: every replica agrees (shard 0 speaks); edge
-                # lanes: the owner shard's result is the only real one
-                success = np.stack([np.asarray(r.success)[:n] for r in results])
-                out = success[owner, np.arange(n)]
-                if attempt > 0:
-                    # growth rehashed every shard, voiding all prior bases
-                    # (the shards setter already dropped them) — but the
-                    # rehash pre-compacted each grown shard's snapshot
-                    # (maintenance "snapshot-compact"), so queue the retried
-                    # batch against those: the next query pays one delta
-                    # fold per shard instead of full rebuilds, exactly like
-                    # the 1-shard path.
-                    if (
-                        mutating
-                        and grow_csrs is not None
-                        and self.csr_maintenance == "delta"
-                        and all(c is not None for c in grow_csrs)
-                    ):
-                        self._shard_csr_bases = grow_csrs
-                        self._delta_batches = [(shard_ops, us0, vs0)]
-                    return out
+            ok = True
+
+            # A. vertex settlement per shard
+            states_a, v_res, evs = [], [], []
+            for s in range(S):
+                st, res, ev_l, ev_i, over = engine.settle_vertices(pre[s], batches[s])
+                ok &= not bool(over)
+                states_a.append(st)
+                v_res.append(res)
+                evs.append((ev_l, ev_i))
+
+            # B. stabbing wave: owner shards answer, host gathers
+            q_live = np.zeros(2 * ne, bool)
+            q_inc = np.zeros(2 * ne, np.int32)
+            for t in range(S):
+                sel = q_sel[t]
+                if sel.size == 0:
+                    continue
+                qk, qp = q_pads[t]
+                live, inc, over = engine.answer_stabs(
+                    pre[t], batches[t], evs[t][0], evs[t][1],
+                    jnp.asarray(qk), jnp.asarray(qp),
+                )
+                ok &= not bool(over)
+                q_live[sel] = np.asarray(live)[: sel.size]
+                q_inc[sel] = np.asarray(inc)[: sel.size]
+            u_live = np.zeros(n, bool)
+            u_inc = np.zeros(n, np.int32)
+            v_live = np.zeros(n, bool)
+            v_inc = np.zeros(n, np.int32)
+            u_live[eidx] = q_live[:ne]
+            u_inc[eidx] = q_inc[:ne]
+            v_live[eidx] = q_live[ne:]
+            v_inc[eidx] = q_inc[ne:]
+
+            # C. edge settlement per shard, fed the gathered answers
+            out = np.zeros(n, bool)
+            states_c = []
+            for s in range(S):
+                idx = shard_idx[s]
+                m = idx.size
+                bucket = batches[s].size
+                ul = np.zeros(bucket, bool)
+                ui = np.zeros(bucket, np.int32)
+                vl = np.zeros(bucket, bool)
+                vi = np.zeros(bucket, np.int32)
+                ul[:m] = u_live[idx]
+                ui[:m] = u_inc[idx]
+                vl[:m] = v_live[idx]
+                vi[:m] = v_inc[idx]
+                st, e_res, over = settle_edges_fn(
+                    states_a[s], batches[s],
+                    jnp.asarray(ul), jnp.asarray(ui),
+                    jnp.asarray(vl), jnp.asarray(vi),
+                )
+                ok &= not bool(over)
+                states_c.append(st)
+                if m:
+                    out[idx] = (
+                        np.asarray(v_res[s])[:m] | np.asarray(e_res)[:m]
+                    )
+
+            if ok and not self._needs_growth_sharded(states_c):
+                self.shards = states_c
                 if not mutating:
+                    # abstractly identical pre/post state: the cached fused
+                    # snapshot stays exactly as valid as before the batch
                     self._csr = saved_csr
-                    self._shard_csr_bases = delta_bases
-                    self._delta_batches = delta_batches
-                elif delta_bases is not None and self.csr_maintenance == "delta":
-                    # queue the routed batch against the per-shard bases;
-                    # traversal_csr() folds each shard's queue on next query
-                    delta_batches = delta_batches + [(shard_ops, us0, vs0)]
-                    floor = min(c.e_capacity for c in delta_bases) // 4
-                    if sum(b[1].size for b in delta_batches) > floor:
-                        delta_bases, delta_batches = None, []
-                    self._shard_csr_bases = delta_bases
-                    self._delta_batches = delta_batches
                 return out
             self.shards = self._grow_shards(pre)
         raise RuntimeError("graph growth did not converge")
 
     def _needs_growth_sharded(self, states: List[GraphState]) -> bool:
-        # one _live_counts dispatch per shard: the vertex check reads shard
-        # 0's counts (the replicas agree byte-for-byte, shard 0 speaks)
         counts = [_live_counts(st) for st in states]
-        if bool(counts[0][2] > GROW_LOAD_FACTOR * states[0].v_capacity):
-            return True
         return any(
-            bool(c[3] > GROW_LOAD_FACTOR * st.e_capacity)
+            bool(c[2] > GROW_LOAD_FACTOR * st.v_capacity)
+            or bool(c[3] > GROW_LOAD_FACTOR * st.e_capacity)
             for c, st in zip(counts, states)
         )
 
     def _grow_shards(self, states: List[GraphState]) -> List[GraphState]:
-        """Per-shard capacity policy: the vertex capacity is shared (one
-        decision for all replicas, so they stay aligned), edge capacities
-        double independently per crowded shard.  Every shard is rehashed in
-        the same round even at unchanged capacity — vertex-tombstone
-        compaction must happen in lockstep or the replicas would diverge."""
-        v_used = int(_live_counts(states[0])[2])
-        new_vcap = states[0].v_capacity
-        if v_used > GROW_LOAD_FACTOR * new_vcap / 2:
-            new_vcap *= 2
-        new_ecaps = []
-        for st in states:
-            e_used = int(_live_counts(st)[3])
-            crowded = e_used > GROW_LOAD_FACTOR * st.e_capacity / 2
-            new_ecaps.append(2 * st.e_capacity if crowded else st.e_capacity)
-        if new_vcap == states[0].v_capacity and all(
+        """Per-shard capacity policy: each shard doubles whichever of its
+        tables is crowded (both key spaces are partitioned, so decisions
+        are independent — no lockstep-replica constraint).  Edge validity
+        during each rehash is judged against the *global* endpoint index
+        (an edge's endpoints generally live on other shards); the
+        escalation loop re-doubles only the shards whose placement
+        overflowed."""
+        counts = [_live_counts(st) for st in states]
+        new_vcaps, new_ecaps = [], []
+        for st, c in zip(states, counts):
+            v_crowd = int(c[2]) > GROW_LOAD_FACTOR * st.v_capacity / 2
+            e_crowd = int(c[3]) > GROW_LOAD_FACTOR * st.e_capacity / 2
+            new_vcaps.append(2 * st.v_capacity if v_crowd else st.v_capacity)
+            new_ecaps.append(2 * st.e_capacity if e_crowd else st.e_capacity)
+        if all(vc == st.v_capacity for vc, st in zip(new_vcaps, states)) and all(
             ec == st.e_capacity for ec, st in zip(new_ecaps, states)
         ):
-            new_vcap *= 2
+            # an engine-pass overflow with no crowded table: a pathological
+            # probe chain somewhere — double everything, same as 1-shard
+            new_vcaps = [2 * vc for vc in new_vcaps]
             new_ecaps = [2 * ec for ec in new_ecaps]
         impl = maintenance.resolve_impl(self.maintenance_impl)
-        # per-shard snapshot-compact rides the device rehash nearly free (one
-        # argsort each); on the host it would be an eager build_csr per shard
-        # per grow attempt — leave that lazy, same policy as 1-shard _grow
-        with_csr = impl != "host" and self.csr_maintenance == "delta"
+        endpoints = sharding.gather_live_vertices(states)
         for _ in range(_MAX_GROW_ATTEMPTS):
             outs = [
-                maintenance.rehash(st, new_vcap, ec, impl=impl, with_csr=with_csr)
-                for st, ec in zip(states, new_ecaps)
+                maintenance.rehash(
+                    st, vc, ec, impl=impl, with_csr=False, endpoints=endpoints
+                )
+                for st, vc, ec in zip(states, new_vcaps, new_ecaps)
             ]
             oks = [bool(ok) for _, _, ok in outs]
             if all(oks):
-                # stashed for _apply_sharded: becomes the per-shard delta
-                # bases of the retried batch (the shards setter must not
-                # clear it — the grown shards are installed right after)
-                self._grow_shard_csrs = [c for _, c, _ in outs] if with_csr else None
                 return sharding.place_shards([s for s, _, _ in outs], self._mesh)
-            if not any(oks):
-                # identical vertex replicas fail identically: when every
-                # shard overflows, the vertex table is the likely culprit
-                new_vcap *= 2
+            new_vcaps = [2 * vc if not ok else vc for vc, ok in zip(new_vcaps, oks)]
             new_ecaps = [2 * ec if not ok else ec for ec, ok in zip(new_ecaps, oks)]
         raise RuntimeError("rehash placement did not converge")
 
@@ -498,33 +571,17 @@ class WaitFreeGraph:
         *current* state, so one fold over many batches is exact); otherwise
         the snapshot is recompacted from scratch.
 
-        Sharded graphs (``n_shards > 1``) build/fold one CSR per shard —
-        each fold sees only that shard's routed ops, so it stays O(shard
-        batch) — and fuse them (:func:`repro.core.sharding.fuse_csrs`) into
-        the one global snapshot every query linearizes against."""
+        Sharded graphs (``n_shards > 1``) rebuild the global snapshot from
+        the partitioned shard states
+        (:func:`repro.core.sharding.fuse_partitioned`): per-shard edge
+        lanes are validated against the canonical global vertex directory
+        and sorted into the one CSR every query linearizes against.  The
+        incremental delta fold does not apply — per-shard slot spaces are
+        private, so the directory (and with it every fused slot) can move
+        on any vertex churn."""
         if self.n_shards > 1:
             if self._csr is None:
-                if self._shard_csr_bases is not None and self._delta_batches:
-                    us_cat = np.concatenate([b[1] for b in self._delta_batches])
-                    vs_cat = np.concatenate([b[2] for b in self._delta_batches])
-                    per_shard = [
-                        traversal.apply_delta(
-                            base,
-                            st,
-                            np.concatenate([b[0][s] for b in self._delta_batches]),
-                            us_cat,
-                            vs_cat,
-                            impl=self.maintenance_impl,
-                        )
-                        for s, (base, st) in enumerate(
-                            zip(self._shard_csr_bases, self._shards)
-                        )
-                    ]
-                else:
-                    per_shard = [traversal.build_csr(st) for st in self._shards]
-                self._csr = sharding.fuse_csrs(per_shard)
-                self._shard_csr_bases = per_shard
-                self._delta_batches = []
+                self._csr = sharding.fuse_partitioned(self._shards)
             return self._csr
         if self._csr is None:
             if self._delta_base is not None and self._delta_batches:
@@ -636,19 +693,30 @@ class WaitFreeGraph:
         incarnation-valid-edge masks (shared with the traversal engine's CSR
         validity predicate); host work is O(live), not O(capacity).
 
-        Sharded graphs union the per-shard edge sets (disjoint partitions)
-        under the shard-0 vertex replica."""
+        Sharded graphs union the per-shard live-vertex partitions and
+        validate every shard's edge lanes against the global sorted
+        endpoint index (an edge's endpoints generally live on other
+        shards)."""
         if self.n_shards > 1:
-            verts = set()
+            sk, si = sharding.gather_live_vertices(self._shards)
+            verts = set(sk.tolist())
             edges = set()
-            for i, st in enumerate(self._shards):
-                v_mask, e_mask = traversal.snapshot_live(st)
-                if i == 0:  # vertex replicas agree: shard 0 speaks for all
-                    verts = set(np.asarray(st.v_key)[np.asarray(v_mask)].tolist())
-                e_mask = np.asarray(e_mask)
-                eu = np.asarray(st.e_key_u)[e_mask].tolist()
-                ev = np.asarray(st.e_key_v)[e_mask].tolist()
-                edges |= set(zip(eu, ev))
+            if sk.size == 0:
+                return verts, edges  # no live endpoints -> no valid edges
+            for st in self._shards:
+                e_live = np.asarray(st.e_live)
+                eu = np.asarray(st.e_key_u)
+                ev = np.asarray(st.e_key_v)
+                fu, pu = sharding._lookup_sorted(sk, eu)
+                fv, pv = sharding._lookup_sorted(sk, ev)
+                valid = (
+                    e_live
+                    & fu
+                    & fv
+                    & (si[pu] == np.asarray(st.e_inc_u))
+                    & (si[pv] == np.asarray(st.e_inc_v))
+                )
+                edges |= set(zip(eu[valid].tolist(), ev[valid].tolist()))
             return verts, edges
         v_mask, e_mask = traversal.snapshot_live(self.state)
         v_mask = np.asarray(v_mask)

@@ -62,9 +62,11 @@ only reclaims tombstones and incarnation-stale edges, which are already
 outside the abstract state).  A ``delta_merge`` inherits the linearization
 point of the CSR it folds into (:mod:`repro.core.traversal`).  Under
 hash-prefix sharding (:mod:`repro.core.sharding`) each shard rehashes its
-own tables with this exact code — placement is per-shard by construction —
-and ``WaitFreeGraph._grow_shards`` synchronizes the rounds so the vertex
-replicas compact in lockstep.
+own partitioned tables with this exact code — placement is per-shard by
+construction — except that edge validity is judged against the *global*
+sorted endpoint index (the ``endpoints`` override on :func:`rehash`):
+an edge's endpoints generally live on other shards, and a shard-local
+check would wrongly discard every cross-shard edge.
 """
 
 from __future__ import annotations
@@ -155,13 +157,22 @@ def _probe_place_host(
 
 
 def rehash_host(
-    state: GraphState, new_vcap: int, new_ecap: int
+    state: GraphState,
+    new_vcap: int,
+    new_ecap: int,
+    endpoints: Optional[Tuple[np.ndarray, np.ndarray]] = None,
 ) -> Tuple[GraphState, bool]:
     """Grow + compact on the host (numpy): keep live vertices (with
     incarnations) and incarnation-valid live edges only — Harris physical
     deletion, batched.  This is the oracle the device paths are tested
     bit-identical against; it is vectorized numpy throughout (the
-    per-element Python loops it replaced live only in git history)."""
+    per-element Python loops it replaced live only in git history).
+
+    ``endpoints``, when given, is the sorted global ``(keys, incs)`` live
+    vertex index edge validity is judged against instead of this state's
+    own vertex table — the partitioned-shard case, where an edge's
+    endpoints generally live on *other* shards
+    (:func:`repro.core.sharding.gather_live_vertices`)."""
     v_key = np.asarray(state.v_key)
     v_live = np.asarray(state.v_live)
     v_inc = np.asarray(state.v_inc)
@@ -188,8 +199,11 @@ def rehash_host(
     e_bu = np.asarray(state.e_inc_u)
     e_bv = np.asarray(state.e_inc_v)
 
-    order = np.argsort(keys, kind="stable")
-    sk, si = keys[order], incs[order]
+    if endpoints is None:
+        order = np.argsort(keys, kind="stable")
+        sk, si = keys[order], incs[order]
+    else:
+        sk, si = endpoints
 
     def inc_now(qs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         if sk.size == 0:
@@ -238,11 +252,45 @@ def rehash_host(
 # ---------------------------------------------------------------------------
 
 
+def _edge_validity_sorted(
+    state: GraphState, sorted_key: jnp.ndarray, sorted_inc: jnp.ndarray
+) -> jnp.ndarray:
+    """Edge validity against an external sorted (key, inc) endpoint index —
+    the device twin of ``rehash_host``'s ``inc_now`` closure under an
+    ``endpoints`` override (partitioned shards: endpoints live elsewhere).
+    Padding lanes carry INT32_MAX keys / ABSENT_INC incs and can never
+    validate a real edge."""
+    n = sorted_key.shape[0]
+    if n == 0:
+        return jnp.zeros(state.e_capacity, bool)
+
+    def look(q):
+        pos = jnp.searchsorted(sorted_key, q)
+        pc = jnp.minimum(pos, n - 1)
+        found = (pos < n) & (sorted_key[pc] == q)
+        return found, sorted_inc[pc]
+
+    fu, iu = look(state.e_key_u)
+    fv, iv = look(state.e_key_v)
+    return (
+        state.e_live
+        & fu
+        & fv
+        & (iu == state.e_inc_u)
+        & (iv == state.e_inc_v)
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("new_vcap", "new_ecap", "prim", "with_csr")
 )
 def _rehash_device(
-    state: GraphState, new_vcap: int, new_ecap: int, prim: str, with_csr: bool
+    state: GraphState,
+    new_vcap: int,
+    new_ecap: int,
+    prim: str,
+    with_csr: bool,
+    endpoints=None,
 ):
     cv_old = state.v_capacity
     ce_old = state.e_capacity
@@ -271,7 +319,14 @@ def _rehash_device(
     )
 
     # --- edges: mask stale bindings, compact, place
-    su_old, sv_old, valid = _edge_validity(state)
+    if endpoints is None:
+        su_old, sv_old, valid = _edge_validity(state)
+    else:
+        # partitioned shard: endpoints judged against the global sorted
+        # index (old endpoint slots are meaningless here — snapshot-compact
+        # requires local endpoints, enforced by rehash())
+        valid = _edge_validity_sorted(state, *endpoints)
+        su_old = sv_old = jnp.zeros(ce_old, i32)
     evals = jnp.stack(
         [
             state.e_key_u,
@@ -347,6 +402,7 @@ def rehash(
     *,
     impl: Optional[str] = None,
     with_csr: bool = False,
+    endpoints: Optional[Tuple[np.ndarray, np.ndarray]] = None,
 ) -> Tuple[GraphState, Optional[TraversalCSR], bool]:
     """Grow + compact into fresh ``(new_vcap, new_ecap)`` tables.
 
@@ -356,14 +412,36 @@ def rehash(
     probe chain would have exceeded ``MAX_PROBES`` — the new state must be
     discarded and the caller should grow further, exactly like a failed
     engine pass.  All impls are bit-identical; see the module docstring.
+
+    ``endpoints`` — sorted global ``(keys, incs)`` numpy arrays — replaces
+    the state's own vertex table as the edge-validity reference: the
+    partitioned-shard case, where an edge's endpoints generally live on
+    other shards.  Incompatible with ``with_csr`` (the snapshot-compact's
+    slot remap is local by construction; the fused snapshot is rebuilt via
+    :func:`repro.core.sharding.fuse_partitioned` instead).
     """
     impl = resolve_impl(impl)
+    assert endpoints is None or not with_csr, (
+        "snapshot-compact requires local endpoints"
+    )
     if impl == "host":
-        new_state, ok = rehash_host(state, new_vcap, new_ecap)
+        new_state, ok = rehash_host(state, new_vcap, new_ecap, endpoints)
         csr = build_csr(new_state) if (with_csr and ok) else None
         return new_state, csr, ok
     prim = _primitive_impl(impl)
-    new_state, csr, ok = _rehash_device(state, new_vcap, new_ecap, prim, with_csr)
+    ep = None
+    if endpoints is not None:
+        # pow2-pad the sorted index so the jitted rehash compiles once per
+        # bucket (INT32_MAX keys sort to the tail and never match)
+        sk, si = endpoints
+        m = sk.shape[0]
+        bucket = max(16, 1 << max(m - 1, 1).bit_length())
+        skp = np.full(bucket, np.iinfo(np.int32).max, np.int32)
+        sip = np.full(bucket, ABSENT_INC, np.int32)
+        skp[:m] = sk
+        sip[:m] = si
+        ep = (jnp.asarray(skp), jnp.asarray(sip))
+    new_state, csr, ok = _rehash_device(state, new_vcap, new_ecap, prim, with_csr, ep)
     return new_state, csr, bool(ok)
 
 

@@ -9,72 +9,83 @@ queries independent of mutators, with the snapshot discipline of arXiv
 2310.02380 at the cross-shard boundary).  See ``docs/ARCHITECTURE.md`` for
 the paper-to-code map.
 
-**Partition rule.**  An edge key ``(u, v)`` lives in shard
-``edge_hash32(u, v) >> (32 - log2 S)`` — the top ``log2 S`` bits (the
-*prefix*) of exactly the 32-bit hash whose low bits (the *suffix*,
-``& (capacity - 1)``) the probe sequence already uses as the home slot
-(:mod:`repro.core.hashing`).  Prefix and suffix are disjoint bit fields for
-any per-shard capacity ≤ ``2**(32 - log2 S)``, so routing is independent of
-within-shard probing and every shard runs the existing
-``hash_probe`` locate, ``probe_place`` placement, and ``masked_compact``
-rehash **unchanged** — no kernel knows sharding exists.
+**Partition rule.**  Both tables partition by the *prefix* of the same
+32-bit hash whose *suffix* the probe sequence already uses as the home slot
+(:mod:`repro.core.hashing`):
 
-**Vertex replication.**  Edge ops must observe endpoint liveness *at their
-own phase* (the paper's Fig. 3 stabbing subtlety), which a partitioned
-vertex table cannot answer shard-locally.  The vertex table is therefore a
-*deterministic replica*: every shard applies the identical vertex-op
-sub-stream at the identical phase stamps.  The engines' vertex wave is
-independent of edge ops, and :func:`route_ops` preserves batch shape (see
-below), so the replicas — placement included — stay **byte-identical**
-across shards and to the 1-shard graph (pinned by
-``tests/test_sharding.py``).  Replication costs vertex memory ``S×``;
-the edge table, the capacity-dominant structure (4× the vertex table at
-default sizes), is what partitioning scales.
+* an edge key ``(u, v)`` lives in shard ``edge_hash32(u, v) >> (32 - log2 S)``;
+* a vertex key ``u`` lives in shard ``vertex_hash32(u) >> (32 - log2 S)``.
 
-**Batch routing** (:func:`route_ops`).  Every shard receives the *full*
-batch with non-owned edge *mutations* rewritten to the read-only
-``OP_CONTAINS_EDGE`` rather than dropped.  Rewriting instead of dropping is
-what makes replication exact: the FPSP conflict mask and both engines'
-claim priorities depend on batch shape and edge-endpoint membership, so
-every shard must see the identical silhouette.  A rewritten op can never
-write (contains mutates nothing, and a non-owned key is never present in
-the shard's edge table), and its result is discarded — per-op results are
-gathered from the owner shard (edge ops) or shard 0 (vertex ops, all
-replicas agree).
+Prefix and suffix are disjoint bit fields for any per-shard capacity
+≤ ``2**(32 - log2 S)``, so routing is independent of within-shard probing
+and every shard runs the existing ``hash_probe`` locate, ``probe_place``
+placement, and ``masked_compact`` rehash **unchanged** — no kernel knows
+sharding exists.  Each shard stores O(N/S) vertices and O(M/S) edges; no
+vertex is ever replicated (pinned by ``tests/test_sharding.py``'s
+occupancy checks).
+
+**Batch routing** (:func:`route_ops`).  Each lane of a batch has exactly
+one *owner* shard — the vertex owner for vertex ops, the edge owner for
+edge ops — and each shard receives only its owned lanes, compacted
+(O(batch/S) sub-batches; lanes keep their global phase stamps, so the
+linearization order is the batch order exactly as with one shard).
+
+**Stabbing wave.**  Edge ops must observe endpoint liveness *at their own
+phase* (the paper's Fig. 3 subtlety), and an edge's endpoints generally
+live on *other* shards.  Between vertex settlement and edge placement the
+host runs an explicit cross-shard exchange: every edge lane emits two
+``(endpoint, phase)`` queries, queries are routed to the endpoint's owner
+shard, the owner answers (live, inc)-at-phase from its own vertex
+transitions (:func:`repro.core.engine.answer_stabs` — the same merged
+scan the monolithic engine runs in-batch), and the gathered answers feed
+the owner shard's edge wave.  Claim priorities and FPSP conflict
+semantics are preserved on each sub-batch because the edge wave itself is
+unchanged — only its endpoint inputs arrive over the wire.
+
+**Fusion** (:func:`fuse_partitioned`).  Per-shard vertex tables have
+disjoint key sets and private slot spaces, so a cross-shard traversal
+snapshot needs one *canonical global vertex directory*: the union of live
+``(key, inc)`` pairs placed into a fresh open-addressing table with the
+deterministic priority-ordered claim rounds the rehash oracle uses
+(priority = key order).  The directory depends only on the live vertex
+set — not on the shard count or per-shard layout — so ``n_shards ∈ {1, 2,
+4}`` produce snapshots over the identical key set and every query answer
+matches.  Edge lanes from all shards are validated against the directory
+(incarnation match — the Fig. 3 hazard mask) and sorted into one CSR.
 
 **Linearization** (mirroring the related papers' snapshot theorems): *a
-cross-shard traversal snapshot is the fusion (:func:`fuse_csrs`) of the S
-per-shard CSRs taken after all S shards installed their post-batch states;
-since each shard's CSR linearizes at the same batch boundary and shards
-partition the edge key space disjointly, the fused CSR is a consistent cut
-of the whole graph at that boundary.*  Queries on the fused CSR
-(``frontier`` / ``bfs`` / ``get_path``) run exactly as on a 1-shard CSR —
-fusion concatenates the per-shard edge arrays with a shard-offset lane
-remap and one stable re-sort, and the per-shard vertex columns are replicas
-so slot identity is already global.
+cross-shard traversal snapshot is the fusion of the S per-shard states
+taken after all S shards installed their post-batch tables; each shard's
+state linearizes at the same batch boundary and shards partition both key
+spaces disjointly, so the fused CSR is a consistent cut of the whole graph
+at that boundary.*
 
 ``WaitFreeGraph(n_shards=...)`` (:mod:`repro.core.graph`) owns the
-host-side loop: route, apply per shard, gather results, grow per shard
-(:mod:`repro.core.maintenance` rehash, synchronized so replicas stay
-aligned).  ``n_shards=1`` bypasses this module entirely and is
-bit-identical to the pre-sharding code path.
+host-side loop: route → vertex settle → stab → gather → edge claim →
+compact, plus per-shard transactional growth (each shard rehashes its own
+tables against the global endpoint directory).  ``n_shards=1`` bypasses
+this module entirely and is bit-identical to the pre-sharding code path.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .hashing import edge_hash32_np
+from .hashing import edge_hash32_np, vertex_hash32_np
+from .maintenance import _probe_place_host
 from .traversal import TraversalCSR
 from .types import (
+    ABSENT_INC,
     EDGE_OPS,
-    OP_ADD_EDGE,
-    OP_CONTAINS_EDGE,
-    OP_REMOVE_EDGE,
+    EMPTY_KEY,
+    GROW_LOAD_FACTOR,
+    MAX_PROBES,
+    OP_NOP,
+    VERTEX_OPS,
     GraphState,
     is_pow2,
     make_state,
@@ -94,94 +105,212 @@ def shard_of_edges(us: np.ndarray, vs: np.ndarray, n_shards: int) -> np.ndarray:
     )
 
 
+def shard_of_vertices(keys: np.ndarray, n_shards: int) -> np.ndarray:
+    """Owner shard per vertex key: the top ``log2 n_shards`` bits (prefix)
+    of ``vertex_hash32`` — the same prefix/suffix split as the edge rule,
+    so per-shard vertex capacity ≤ ``2**(32 - log2 S)`` keeps routing and
+    probing on disjoint bit fields."""
+    assert is_pow2(n_shards), "n_shards must be a power of two"
+    keys = np.asarray(keys, np.int32)
+    if n_shards == 1:
+        return np.zeros(keys.shape, np.int32)
+    k = n_shards.bit_length() - 1
+    return (vertex_hash32_np(keys) >> np.uint32(32 - k)).astype(np.int32)
+
+
 def route_ops(
     ops: np.ndarray, us: np.ndarray, vs: np.ndarray, n_shards: int
 ) -> Tuple[List[np.ndarray], np.ndarray]:
-    """Per-shard op arrays + owner shard per lane.
+    """Partition a batch's lanes by owner shard.
 
-    Shard ``s`` receives the full batch with non-owned edge mutations
-    (AddE/RemE) rewritten to ``OP_CONTAINS_EDGE`` — same length, same
-    ``(u, v, phase)`` lanes, same vertex/edge-op silhouette, so conflict
-    masks and claim priorities are identical in every shard (the replica
-    invariant; see the module docstring).  ``owner[i]`` is the shard whose
-    result is authoritative for lane ``i`` (0 for vertex ops and NOPs).
-    """
+    Returns ``(shard_idx, owner)``: ``owner[i]`` is the shard that owns
+    lane ``i`` (vertex owner for vertex ops, edge owner for edge ops, 0
+    for NOPs), and ``shard_idx[s]`` is the ascending lane-index array of
+    shard ``s``'s owned non-NOP lanes.  Each lane appears in exactly one
+    shard's list — sub-batches are O(batch/S), and no silhouette is
+    replicated (the stabbing wave carries the cross-shard information the
+    old read-only rewrite used to smuggle in)."""
     ops = np.asarray(ops, np.int32)
+    us = np.asarray(us, np.int32)
+    vs = np.asarray(vs, np.int32)
     owner = np.zeros(ops.shape, np.int32)
-    is_edge = np.isin(ops, EDGE_OPS)
-    owner[is_edge] = shard_of_edges(us[is_edge], vs[is_edge], n_shards)
-    is_emut = (ops == OP_ADD_EDGE) | (ops == OP_REMOVE_EDGE)
-    shard_ops = []
-    for s in range(n_shards):
-        o = ops.copy()
-        o[is_emut & (owner != s)] = OP_CONTAINS_EDGE
-        shard_ops.append(o)
-    return shard_ops, owner
+    is_vop = np.isin(ops, VERTEX_OPS)
+    is_eop = np.isin(ops, EDGE_OPS)
+    owner[is_vop] = shard_of_vertices(us[is_vop], n_shards)
+    owner[is_eop] = shard_of_edges(us[is_eop], vs[is_eop], n_shards)
+    active = ops != OP_NOP
+    shard_idx = [
+        np.flatnonzero(active & (owner == s)).astype(np.int64)
+        for s in range(n_shards)
+    ]
+    return shard_idx, owner
 
 
 def make_shard_states(
-    v_capacity: int, e_shard_capacity: int, n_shards: int
+    v_shard_capacity: int, e_shard_capacity: int, n_shards: int
 ) -> List[GraphState]:
-    """Fresh empty shards: each carries the full-capacity vertex replica and
-    a ``1/n_shards`` partition of the edge capacity."""
-    return [make_state(v_capacity, e_shard_capacity) for _ in range(n_shards)]
+    """Fresh empty shards: each carries a ``1/n_shards`` partition of both
+    the vertex and the edge key space (O(N/S) + O(M/S) per shard)."""
+    return [make_state(v_shard_capacity, e_shard_capacity) for _ in range(n_shards)]
 
 
 # ---------------------------------------------------------------------------
-# cross-shard snapshot fusion
+# canonical global vertex directory + cross-shard snapshot fusion
 # ---------------------------------------------------------------------------
 
 
-@jax.jit
-def _fuse_csrs_jit(csrs: Tuple[TraversalCSR, ...]) -> TraversalCSR:
-    first = csrs[0]
-    cv = first.v_key.shape[0]
-    i32 = jnp.int32
-    # shard-offset lane remap: global lane = shard offset + local lane (the
-    # provenance a future cross-shard delta fold would splice against)
-    offs = np.cumsum([0] + [c.src.shape[0] for c in csrs[:-1]])
-    src = jnp.concatenate([c.src for c in csrs])
-    dst = jnp.concatenate([c.dst for c in csrs])
-    lane = jnp.concatenate([c.lane + i32(o) for c, o in zip(csrs, offs)])
-    # per-shard invalid entries already carry src == Cv (the shared sentinel
-    # — vertex capacity is a replica invariant), so one stable sort pushes
-    # them all to the fused tail, exactly like build_csr's
-    order = jnp.argsort(src, stable=True).astype(i32)
+class VertexDirectory(NamedTuple):
+    """A canonical global vertex table over the union of per-shard live
+    vertices — the slot space cross-shard snapshots traverse in.
+
+    Placement is deterministic in the live key *set* alone (keys sorted
+    ascending, priority-ordered claim rounds, capacity the smallest
+    power of two respecting ``GROW_LOAD_FACTOR``), so any shard counts
+    holding the same abstract graph build byte-identical directories.
+    ``sorted_key``/``sorted_inc``/``sorted_slot`` expose the same content
+    as a binary-searchable index (edge validation, snapshots, rehash)."""
+
+    v_key: np.ndarray     # i32[C] — EMPTY_KEY where unused
+    v_live: np.ndarray    # bool[C]
+    v_inc: np.ndarray     # i32[C]
+    n_live: int
+    sorted_key: np.ndarray   # i32[n_live] — live keys, ascending
+    sorted_inc: np.ndarray   # i32[n_live]
+    sorted_slot: np.ndarray  # i32[n_live] — directory slot per sorted key
+
+
+def gather_live_vertices(
+    states: Sequence[GraphState],
+) -> Tuple[np.ndarray, np.ndarray]:
+    """The union of live ``(key, inc)`` pairs across shards, sorted by key
+    (shards partition the key space, so keys are globally unique).  This is
+    the endpoint index the sharded rehash and snapshot validate edges
+    against."""
+    keys = []
+    incs = []
+    for st in states:
+        live = np.asarray(st.v_live)
+        keys.append(np.asarray(st.v_key)[live])
+        incs.append(np.asarray(st.v_inc)[live])
+    k = np.concatenate(keys) if keys else np.zeros(0, np.int32)
+    i = np.concatenate(incs) if incs else np.zeros(0, np.int32)
+    order = np.argsort(k, kind="stable")
+    return k[order].astype(np.int32), i[order].astype(np.int32)
+
+
+def _directory_capacity(n_live: int) -> int:
+    cap = 64
+    while n_live > GROW_LOAD_FACTOR * cap:
+        cap *= 2
+    return cap
+
+
+def build_vertex_directory(states: Sequence[GraphState]) -> VertexDirectory:
+    """Place the global live vertex set into one canonical open-addressing
+    table (same hash, same triangular probing, same ``MAX_PROBES`` bound as
+    the engines' locate — so :func:`repro.core.locate.locate_vertices`
+    works on the directory columns unchanged).  Capacity escalates ×2 on
+    placement overflow, exactly like a rehash."""
+    sorted_key, sorted_inc = gather_live_vertices(states)
+    n_live = sorted_key.shape[0]
+    cap = _directory_capacity(n_live)
+    for _ in range(24):
+        home = (vertex_hash32_np(sorted_key) & np.uint32(cap - 1)).astype(np.int32)
+        slots, overflow = _probe_place_host(home, cap, MAX_PROBES)
+        if not overflow:
+            v_key = np.full(cap, EMPTY_KEY, np.int32)
+            v_live = np.zeros(cap, bool)
+            v_inc = np.full(cap, ABSENT_INC, np.int32)
+            v_key[slots] = sorted_key
+            v_inc[slots] = sorted_inc
+            v_live[slots] = True
+            return VertexDirectory(
+                v_key=v_key,
+                v_live=v_live,
+                v_inc=v_inc,
+                n_live=int(n_live),
+                sorted_key=sorted_key,
+                sorted_inc=sorted_inc,
+                sorted_slot=slots.astype(np.int32),
+            )
+        cap *= 2
+    raise RuntimeError("vertex directory placement did not converge")
+
+
+def _lookup_sorted(
+    sorted_key: np.ndarray, queries: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(found, position) of each query key in the ascending key index."""
+    if sorted_key.size == 0:
+        return np.zeros(queries.shape, bool), np.zeros(queries.shape, np.int64)
+    pos = np.searchsorted(sorted_key, queries)
+    pos_c = np.minimum(pos, sorted_key.size - 1)
+    found = (pos < sorted_key.size) & (sorted_key[pos_c] == queries)
+    return found, pos_c
+
+
+def fuse_partitioned(
+    states: Sequence[GraphState], directory: Optional[VertexDirectory] = None
+) -> TraversalCSR:
+    """Fuse S partitioned shard states into one global
+    :class:`~repro.core.traversal.TraversalCSR`.
+
+    The vertex columns are the canonical directory's (see
+    :class:`VertexDirectory` — identical for any shard count holding the
+    same abstract graph); edge lanes are concatenated across shards
+    (global lane = shard offset + local lane, the provenance order),
+    validated against the directory (live lane, both endpoints present,
+    incarnations match), and stably sorted by source slot exactly like
+    ``build_csr``.  Every traversal query (``reachable`` / ``bfs_parents``
+    / ``path_probe`` / ``khop_mask``) runs on the result unchanged."""
+    if directory is None:
+        directory = build_vertex_directory(states)
+    d = directory
+
+    e_ku = np.concatenate([np.asarray(st.e_key_u) for st in states])
+    e_kv = np.concatenate([np.asarray(st.e_key_v) for st in states])
+    e_live = np.concatenate([np.asarray(st.e_live) for st in states])
+    e_bu = np.concatenate([np.asarray(st.e_inc_u) for st in states])
+    e_bv = np.concatenate([np.asarray(st.e_inc_v) for st in states])
+    ce = e_ku.shape[0]
+    cv = d.v_key.shape[0]
+
+    if d.n_live == 0:
+        # no live vertices -> no valid edges; the index arrays are empty
+        # and must not be fancy-indexed
+        valid = np.zeros(ce, bool)
+        src = np.full(ce, cv, np.int32)
+        dst = np.full(ce, cv, np.int32)
+    else:
+        fu, pu = _lookup_sorted(d.sorted_key, e_ku)
+        fv, pv = _lookup_sorted(d.sorted_key, e_kv)
+        valid = (
+            e_live
+            & fu
+            & fv
+            & (d.sorted_inc[pu] == e_bu)
+            & (d.sorted_inc[pv] == e_bv)
+        )
+        src = np.where(valid, d.sorted_slot[pu], cv).astype(np.int32)
+        dst = np.where(valid, d.sorted_slot[pv], cv).astype(np.int32)
+    lane = np.arange(ce, dtype=np.int32)
+
+    order = np.argsort(src, kind="stable")
     src, dst, lane = src[order], dst[order], lane[order]
-    rows = jnp.arange(cv, dtype=i32)
+    rows = np.arange(cv, dtype=np.int32)
+    i32 = jnp.int32
     return TraversalCSR(
-        # vertex columns are byte-identical replicas: shard 0 speaks for all
-        v_key=first.v_key,
-        v_live=first.v_live,
-        v_inc=first.v_inc,
-        n_live=first.n_live,
-        src=src,
-        dst=dst,
-        lane=lane,
-        row_start=jnp.searchsorted(src, rows, side="left").astype(i32),
-        row_end=jnp.searchsorted(src, rows, side="right").astype(i32),
-        n_edges=sum(c.n_edges for c in csrs).astype(i32),
+        v_key=jnp.asarray(d.v_key),
+        v_live=jnp.asarray(d.v_live),
+        v_inc=jnp.asarray(d.v_inc),
+        n_live=jnp.asarray(d.n_live, i32),
+        src=jnp.asarray(src),
+        dst=jnp.asarray(dst),
+        lane=jnp.asarray(lane),
+        row_start=jnp.asarray(np.searchsorted(src, rows, side="left"), i32),
+        row_end=jnp.asarray(np.searchsorted(src, rows, side="right"), i32),
+        n_edges=jnp.asarray(int(valid.sum()), i32),
     )
-
-
-def fuse_csrs(csrs: Sequence[TraversalCSR]) -> TraversalCSR:
-    """Concatenate per-shard snapshots into one global CSR.
-
-    The result is a plain :class:`~repro.core.traversal.TraversalCSR` —
-    every traversal query (``reachable``/``bfs_parents``/``path_probe``/
-    ``khop_mask``) runs on it exactly as on a 1-shard snapshot.  With one
-    shard this is the identity (bit-identical to the pre-sharding path).
-    Fused ``dst`` order within a row follows (shard, local lane) rather than
-    the 1-shard global lane order; every query result is order-independent
-    (scatter-*min*), so results — levels, parents, paths — are still
-    byte-identical to the 1-shard graph's.
-    """
-    csrs = list(csrs)
-    if len(csrs) == 1:
-        return csrs[0]
-    cv = csrs[0].v_capacity
-    assert all(c.v_capacity == cv for c in csrs), "vertex replicas must agree"
-    return _fuse_csrs_jit(tuple(csrs))
 
 
 # ---------------------------------------------------------------------------
@@ -192,8 +321,8 @@ def fuse_csrs(csrs: Sequence[TraversalCSR]) -> TraversalCSR:
 def host_local_mesh() -> jax.sharding.Mesh:
     """A 1-D ``jax.sharding.Mesh`` over every local device (named
     ``"shard"``).  On single-device CPU this is the degenerate mesh the
-    bit-identity tests pin the multi-shard path against; on a TPU slice the
-    same code round-robins shards across real devices."""
+    answer-identity tests pin the multi-shard path against; on a TPU slice
+    the same code round-robins shards across real devices."""
     devs = np.asarray(jax.devices())
     return jax.sharding.Mesh(devs.reshape(-1), ("shard",))
 
@@ -218,4 +347,12 @@ def edge_shard_histogram(
     ops = np.asarray(ops, np.int32)
     mask = np.isin(ops, EDGE_OPS)
     sid = shard_of_edges(np.asarray(us, np.int32)[mask], np.asarray(vs, np.int32)[mask], n_shards)
+    return np.bincount(sid, minlength=n_shards)
+
+
+def vertex_shard_histogram(keys: np.ndarray, n_shards: int) -> np.ndarray:
+    """Vertex count per owner shard — the vertex-side balance metric (the
+    imbalance stress tests aim a hot key at one shard and check the
+    stabbing wave still answers exactly)."""
+    sid = shard_of_vertices(np.asarray(keys, np.int32), n_shards)
     return np.bincount(sid, minlength=n_shards)

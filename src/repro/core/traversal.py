@@ -54,9 +54,11 @@ graph, and no query observes a partially applied batch.*  This holds
 because a CSR is a pure value compacted from one installed
 :class:`~repro.core.types.GraphState` — there is no interleaving to
 observe.  Under hash-prefix sharding the same statement holds for the
-*fused* CSR (:func:`repro.core.sharding.fuse_csrs`): every shard installed
-its post-batch state before fusion, and shards partition the edge keys
-disjointly, so the fusion is a consistent cut at the same batch boundary.
+*fused* CSR (:func:`repro.core.sharding.fuse_partitioned`): every shard
+installed its post-batch state before fusion, and shards partition both
+key spaces disjointly, so the fusion — per-shard edge lanes validated
+against the canonical global vertex directory — is a consistent cut at
+the same batch boundary.
 
 Host-side convenience wrappers (key-space in/out, batch bucketing, path
 reconstruction) live on :class:`repro.core.graph.WaitFreeGraph`.  The
@@ -554,6 +556,40 @@ def reachable(
     return vlive & (levels[jnp.arange(us.shape[0]), safe] >= 0)
 
 
+def _canonical_parents(csr: TraversalCSR, levels: jnp.ndarray) -> jnp.ndarray:
+    """Rewrite BFS parents to the minimum-*key* predecessor on a shortest
+    path (one scatter-min over the edge list).
+
+    ``_bfs_from_slots``'s parents are the minimum frontier *slot*, which is
+    layout-dependent: the same abstract graph held at different shard
+    counts (or after a rehash) numbers slots differently, so when several
+    shortest paths exist the reconstructed path would differ.  Keys are
+    layout-invariant, so min-key parents make ``GetPath`` canonical —
+    identical key sequences for ``n_shards ∈ {1, 2, 4}`` by construction."""
+    cv = csr.v_capacity
+    i32 = jnp.int32
+    big = jnp.iinfo(jnp.int32).max
+    n_src = levels.shape[0]
+
+    # rank slots by key (live keys are unique; dead slots sort to the tail)
+    order = jnp.argsort(jnp.where(csr.v_live, csr.v_key, big)).astype(i32)
+    rank = jnp.zeros(cv, i32).at[order].set(jnp.arange(cv, dtype=i32))
+
+    # sentinel column cv absorbs invalid edge lanes (src == dst == cv)
+    lv = jnp.concatenate([levels, jnp.full((n_src, 1), _NO_LEVEL)], axis=1)
+    ls = lv[:, csr.src]
+    ld = lv[:, csr.dst]
+    on_path = (ls >= 0) & (ld == ls + 1)
+    cand = jnp.where(on_path, rank[jnp.clip(csr.src, 0, cv - 1)], big)
+    best = jnp.full((n_src, cv + 1), big, i32)
+    best = best.at[jnp.arange(n_src, dtype=i32)[:, None], csr.dst[None, :]].min(cand)
+    best = best[:, :cv]
+    parent = jnp.where(
+        (best < big) & (levels > 0), order[jnp.clip(best, 0, cv - 1)], _NO_PARENT
+    )
+    return parent
+
+
 @functools.partial(jax.jit, static_argnames=("impl",))
 def path_probe(
     csr: TraversalCSR, us: jnp.ndarray, vs: jnp.ndarray, impl: Optional[str] = None
@@ -562,11 +598,14 @@ def path_probe(
 
     One locate per endpoint set, one BFS for the whole batch; the host walks
     ``parents`` back from ``target_slot`` to reconstruct explicit key-space
-    paths (:meth:`repro.core.graph.WaitFreeGraph.get_path`)."""
+    paths (:meth:`repro.core.graph.WaitFreeGraph.get_path`).  Parents are
+    canonicalized to the minimum-key shortest-path predecessor
+    (:func:`_canonical_parents`), so the reconstructed path is identical
+    across table layouts — in particular across shard counts."""
     uslot, ulive = _locate_live_slots(csr, us)
     vslot, vlive = _locate_live_slots(csr, vs)
-    levels, parents = _bfs_from_slots(csr, uslot, ulive, impl)
-    return levels, parents, vslot, vlive
+    levels, _ = _bfs_from_slots(csr, uslot, ulive, impl)
+    return levels, _canonical_parents(csr, levels), vslot, vlive
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

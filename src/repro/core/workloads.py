@@ -81,6 +81,36 @@ def sample_update_batch(rng: np.random.Generator, n: int, key_space: int = 1000)
     return ops, us, vs
 
 
+def skewed_update_batch(
+    rng: np.random.Generator,
+    n: int,
+    key_space: int = 1000,
+    zipf_a: float = 1.5,
+    hot_key: int | None = None,
+    hot_frac: float = 0.5,
+):
+    """Sample a mutation-only batch whose endpoints follow a Zipf law —
+    the adversarial input for partitioned tables, where hash-prefix
+    routing no longer guarantees balanced sub-batches.
+
+    Endpoint keys are drawn as ``(zipf(a) - 1) % key_space`` so a handful
+    of keys absorb most of the traffic.  If ``hot_key`` is given, a
+    ``hot_frac`` fraction of the ``u`` endpoints is additionally pinned to
+    that single key: every shard count must then survive one shard owning
+    nearly the whole batch (the imbalance stress in test_sharding).  Op
+    mix is the mutation-only restriction of ``query_heavy``, same as
+    :func:`sample_update_batch`."""
+    probs = np.asarray(MIXES["query_heavy"], float)
+    probs = np.where(np.isin(_OPS, (OP_CONTAINS_VERTEX, OP_CONTAINS_EDGE)), 0.0, probs)
+    ops = _OPS[rng.choice(6, size=n, p=probs / probs.sum())]
+    us = ((rng.zipf(zipf_a, size=n) - 1) % key_space).astype(np.int32)
+    vs = ((rng.zipf(zipf_a, size=n) - 1) % key_space).astype(np.int32)
+    if hot_key is not None:
+        pin = rng.random(n) < hot_frac
+        us = np.where(pin, np.int32(hot_key), us)
+    return ops, us, vs
+
+
 def shard_balance(ops, us, vs, n_shards: int) -> np.ndarray:
     """Edge-op count per hash-prefix shard for one batch
     (:func:`repro.core.sharding.shard_of_edges` routing).

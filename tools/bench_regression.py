@@ -1,0 +1,103 @@
+"""Maintenance-benchmark regression gate.
+
+Compares the current run's ``BENCH_maintenance.json`` against a baseline
+file (the previous CI run's artifact) and fails on a >25% ``snap_ms``
+slowdown in any **host-oracle** maintenance row — the deterministic numpy
+paths (``delta_host``, ``rehash_host``) whose cost is dominated by
+algorithmic work, not device dispatch, so a sustained slowdown there is a
+real complexity regression rather than scheduler noise.  Device/interpret
+rows are reported but never gate: their timings swing with XLA version and
+CI machine load.
+
+Rows are keyed by ``(impl, build, graph_size, batch, n_shards)``; keys
+present in only one file are reported and skipped (the benchmark matrix is
+allowed to evolve).  A missing or unreadable baseline exits 0 — the first
+run after this gate lands, a matrix change, or an expired artifact must
+not block CI.
+
+Usage:
+    python tools/bench_regression.py BASELINE.json CURRENT.json \
+        [--threshold 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# the host-oracle rows: deterministic numpy work, meaningful to gate on
+GATED_IMPLS = ("delta_host", "rehash_host")
+# below this absolute cost, ratios are mostly timer noise on shared runners
+MIN_GATED_MS = 0.25
+
+
+def _load_rows(path: Path):
+    data = json.loads(path.read_text())
+    rows = data["rows"] if isinstance(data, dict) else data
+    out = {}
+    for r in rows:
+        key = (
+            r["impl"],
+            r.get("build", "?"),
+            r.get("graph_size", 0),
+            r.get("batch", 0),
+            r.get("n_shards", 1),
+        )
+        out[key] = float(r["snap_ms"])
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("current", type=Path)
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional slowdown (default 0.25)")
+    args = ap.parse_args(argv)
+
+    try:
+        base = _load_rows(args.baseline)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"no usable baseline ({args.baseline}: {e}); skipping gate")
+        return 0
+    try:
+        cur = _load_rows(args.current)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"::error::current bench file unreadable ({args.current}: {e})")
+        return 1
+
+    failures = []
+    compared = 0
+    for key in sorted(set(base) | set(cur)):
+        impl = key[0]
+        if key not in base or key not in cur:
+            where = "baseline" if key not in base else "current"
+            print(f"skip (only in {'current' if where == 'baseline' else 'baseline'}): {key}")
+            continue
+        b, c = base[key], cur[key]
+        ratio = c / b if b > 0 else float("inf")
+        gated = impl in GATED_IMPLS and max(b, c) >= MIN_GATED_MS
+        tag = "GATE" if gated else "info"
+        print(f"[{tag}] {key}: {b:.3f} ms -> {c:.3f} ms ({ratio:.2f}x)")
+        if gated:
+            compared += 1
+            if ratio > 1.0 + args.threshold:
+                failures.append((key, b, c, ratio))
+
+    if not compared:
+        print("no gated host-oracle rows in common; nothing to compare")
+        return 0
+    for key, b, c, ratio in failures:
+        print(f"::error::maintenance regression {key}: "
+              f"{b:.3f} ms -> {c:.3f} ms ({ratio:.2f}x > "
+              f"{1 + args.threshold:.2f}x allowed)")
+    if not failures:
+        print(f"bench regression gate OK ({compared} host-oracle rows within "
+              f"{args.threshold:.0%})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

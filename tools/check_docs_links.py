@@ -4,7 +4,8 @@ Run from the repo root (CI lint job does):
 
     python tools/check_docs_links.py
 
-Scans README.md and docs/*.md for markdown link targets ``[text](target)``
+Scans README.md, ROADMAP.md, CHANGES.md, and docs/*.md for markdown link
+targets ``[text](target)``
 and fails if a relative target (no URL scheme, not a pure anchor) does not
 exist on disk, or escapes the repository (the CI badge URL is the one
 sanctioned escape — GitHub resolves it, the filesystem cannot).  Also
@@ -49,7 +50,12 @@ def check_file(md: Path) -> list[str]:
 
 
 def main() -> int:
-    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    files = [
+        ROOT / "README.md",
+        ROOT / "ROADMAP.md",
+        ROOT / "CHANGES.md",
+        *sorted((ROOT / "docs").glob("*.md")),
+    ]
     errors = []
     for md in files:
         if not md.exists():
