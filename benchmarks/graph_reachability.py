@@ -61,10 +61,22 @@ design's O(N/S) memory claim as a measured column — it should fall ~1/S as
 ``n_shards`` rises on the same abstract graph.  See the README
 "Benchmarks" section for how to read the CSV and ``BENCH_maintenance.json``.
 
+Three obs-derived columns ride along (``docs/OBSERVABILITY.md``), computed
+from each graph's *build* telemetry — the timed loops run with no registry
+active: ``fastpath_frac`` (fraction of build ops that stayed on the FPSP
+fast path; blank for non-FPSP builds with no conflict accounting),
+``mean_probe_len`` (mean physical probe-chain length over both tables,
+``repro.obs.probes``), ``claim_rounds_p99`` (p99 of claim rounds per
+settle — the helping-bound witness).  The per-graph registries are dumped
+to ``BENCH_obs.json`` (rendered by ``tools/obs_report.py``; CI uploads it
+next to the CSV artifact), and ``tools/bench_regression.py`` gates on
+``fastpath_frac`` drift.
+
 Usage:  python benchmarks/graph_reachability.py [--quick] [--kernels]
 Output: CSV rows on stdout
         (bench,engine,impl,build,graph_size,batch,n_shards,snap_ms,
-        us_per_query,peak_bytes).
+        us_per_query,peak_bytes,fastpath_frac,mean_probe_len,
+        claim_rounds_p99).
 """
 
 from __future__ import annotations
@@ -78,6 +90,8 @@ import jax
 import numpy as np
 
 from repro.core import WaitFreeGraph, maintenance, sharding, traversal
+from repro.obs import metrics as obsm
+from repro.obs import probes as obsprobes
 from repro.core.workloads import (
     initial_vertices,
     sample_batch,
@@ -92,20 +106,45 @@ MAINT_QUERY_WINDOW = 256  # queries amortizing each maintenance refresh
 
 
 def _build_graph(
-    key_space: int, mode: str, seed: int = 0, n_shards: int = 1
+    key_space: int, mode: str, seed: int = 0, n_shards: int = 1,
+    obs: bool = True,
 ) -> WaitFreeGraph:
     """Pre-seeded vertices (the paper's initial graph) + traversal-mix
-    traffic, so AddE lands on live endpoints and real path structure forms."""
+    traffic, so AddE lands on live endpoints and real path structure forms.
+
+    Each graph gets its own obs :class:`~repro.obs.metrics.Registry` so the
+    build traffic's telemetry (fast-path fraction, claim rounds) is
+    per-graph.  Only the *build* is instrumented — the timed query and
+    maintenance loops below run with no registry active, so the numbers in
+    the timing columns are obs-free (the overhead contract in
+    ``docs/OBSERVABILITY.md``)."""
     rng = np.random.default_rng(seed)
     g = WaitFreeGraph(
         v_capacity=4 * key_space, e_capacity=16 * key_space, mode=mode,
-        n_shards=n_shards,
+        n_shards=n_shards, obs=obsm.Registry() if obs else False,
     )
     g.apply(*initial_vertices(key_space))
     for _ in range(4):
         ops, us, vs = sample_batch(rng, key_space // 2, "traversal", key_space=key_space)
         g.apply(ops, us, vs)
     return g
+
+
+def _obs_columns(g: WaitFreeGraph) -> Dict:
+    """The three obs-derived CSV columns for one built graph: build-traffic
+    fast-path fraction, mean physical probe-chain length, and the p99 of
+    claim rounds per settle.  ``None`` (blank CSV cell) where the registry
+    saw no relevant traffic."""
+    reg = g.obs
+    if not reg.enabled:
+        return dict(fastpath_frac=None, mean_probe_len=None,
+                    claim_rounds_p99=None)
+    g.probe_health()  # file probe.vertex / probe.edge hists into the registry
+    return dict(
+        fastpath_frac=obsm.fastpath_frac(reg),
+        mean_probe_len=obsprobes.mean_probe_len(g),
+        claim_rounds_p99=reg.percentile("engine.claim_rounds", 99),
+    )
 
 
 def _snap_csr(g: WaitFreeGraph):
@@ -297,6 +336,7 @@ def run(
     maint_batches: int = 8,
     update_batches=(8, 32, 128),
     shard_counts=(1, 4),
+    obs_out: Dict = None,
 ) -> List[Dict]:
     impls = [("reference", "reference")]  # explicit: impl=None auto-picks the kernel on TPU
     if jax.default_backend() == "tpu":
@@ -312,6 +352,11 @@ def run(
             shard_ref: Dict[int, List] = {}
             for n_shards in shard_counts:
                 g = _build_graph(key_space, mode, seed, n_shards)
+                ocols = _obs_columns(g)
+                if obs_out is not None:
+                    obs_out[f"{mode}/ks{key_space}/shards{n_shards}"] = (
+                        g.obs.dump()
+                    )
                 rng = np.random.default_rng(seed + 1)
                 pb = _peak_shard_bytes(g)
                 snap_b, csr = _bench_snap(g)
@@ -325,7 +370,7 @@ def run(
                                          n_shards=n_shards,
                                          snap_ms=1e3 * snap_b,
                                          us_per_query=1e6 * dt_b / n,
-                                         peak_bytes=pb))
+                                         peak_bytes=pb, **ocols))
                         if ref_out is None:
                             ref_out = out_b
                         else:
@@ -347,7 +392,7 @@ def run(
                                      n_shards=n_shards,
                                      snap_ms=1e3 * snap_o,
                                      us_per_query=1e6 * dt_o / n,
-                                     peak_bytes=pb))
+                                     peak_bytes=pb, **ocols))
             # rebuild-vs-delta maintenance on the update-light mix; the
             # update-batch sweep exposes what each refresh scales with
             # (the device merge should track batch size, the host splice
@@ -355,6 +400,9 @@ def run(
             # the refresh primitives are per-shard by construction, so the
             # single-shard number is the per-shard cost.
             g = _build_graph(key_space, mode, seed)
+            ocols1 = _obs_columns(g)
+            if obs_out is not None:
+                obs_out[f"{mode}/ks{key_space}/maint"] = g.obs.dump()
             pb1 = _peak_shard_bytes(g)
             for update_batch in update_batches:
                 maint = _bench_maintenance(
@@ -367,7 +415,7 @@ def run(
                                      n_shards=1,
                                      snap_ms=snap_ms,
                                      us_per_query=1e3 * snap_ms / MAINT_QUERY_WINDOW,
-                                     peak_bytes=pb1))
+                                     peak_bytes=pb1, **ocols1))
             # growth rehash: host claim rounds vs device compaction pipeline
             for policy, snap_ms in _bench_rehash(
                 g, max(2, timed // 4), kernels=kernels
@@ -377,7 +425,7 @@ def run(
                                  n_shards=1,
                                  snap_ms=snap_ms,
                                  us_per_query=1e3 * snap_ms / MAINT_QUERY_WINDOW,
-                                 peak_bytes=pb1))
+                                 peak_bytes=pb1, **ocols1))
             # the sharded counterparts: fused refresh + endpoint-indexed
             # per-shard rehash, peak_bytes showing the O(N/S) footprint
             s_last = shard_counts[-1]
@@ -387,6 +435,11 @@ def run(
                     s_last,
                 )
                 pbs = _peak_shard_bytes(gs)
+                ocols_s = _obs_columns(gs)
+                if obs_out is not None:
+                    obs_out[f"{mode}/ks{key_space}/maint_shards{s_last}"] = (
+                        gs.obs.dump()
+                    )
                 for policy, snap_ms in maint_s.items():
                     rows.append(dict(engine="maintenance", impl=policy,
                                      build=mode, graph_size=key_space,
@@ -396,7 +449,7 @@ def run(
                                      snap_ms=snap_ms,
                                      us_per_query=1e3 * snap_ms
                                      / MAINT_QUERY_WINDOW,
-                                     peak_bytes=pbs))
+                                     peak_bytes=pbs, **ocols_s))
     return rows
 
 
@@ -404,26 +457,38 @@ def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
     quick = "--quick" in argv
     kernels = "--kernels" in argv
+    obs_dumps: Dict[str, Dict] = {}
     rows = run(
         # 512 floor: at 256 the whole edge table is small enough that a full
         # rebuild costs about as much as the delta's fixed overhead, and the
         # maintenance comparison drowns in scheduler noise on shared CI
         graph_sizes=(512, 1024) if quick else GRAPH_SIZES,
         batches=(16, 128) if quick else QUERY_BATCHES,
-        build_modes=("waitfree",) if quick else ("waitfree", "fpsp"),
+        # quick keeps one mode; fpsp so the fastpath_frac column (and the
+        # BENCH_obs.json artifact CI uploads) carries the FPSP telemetry
+        build_modes=("fpsp",) if quick else ("waitfree", "fpsp"),
         timed=2 if quick else 8,
         kernels=kernels,
         maint_batches=4 if quick else 8,
         update_batches=(8, 64) if quick else (8, 32, 128),
         shard_counts=(1, 2) if quick else (1, 4),
+        obs_out=obs_dumps,
     )
+
+    def _cell(v, fmt):
+        return "" if v is None else format(v, fmt)
+
     print("bench,engine,impl,build,graph_size,batch,n_shards,snap_ms,"
-          "us_per_query,peak_bytes")
+          "us_per_query,peak_bytes,fastpath_frac,mean_probe_len,"
+          "claim_rounds_p99")
     for r in rows:
         print(
             f"graph_reachability,{r['engine']},{r['impl']},{r['build']},"
             f"{r['graph_size']},{r['batch']},{r['n_shards']},{r['snap_ms']:.3f},"
-            f"{r['us_per_query']:.2f},{r['peak_bytes']}"
+            f"{r['us_per_query']:.2f},{r['peak_bytes']},"
+            f"{_cell(r['fastpath_frac'], '.4f')},"
+            f"{_cell(r['mean_probe_len'], '.3f')},"
+            f"{_cell(r['claim_rounds_p99'], '.1f')}"
         )
     # the maintenance trajectory, machine-readable (CI uploads it next to
     # the CSV artifact)
@@ -441,6 +506,22 @@ def main(argv=None):
             indent=2,
         )
     print(f"# maintenance rows -> BENCH_maintenance.json ({len(maint_rows)} rows)",
+          file=sys.stderr)
+    # per-graph build telemetry (counters, claim-round + probe histograms,
+    # phase spans), machine-readable — ``tools/obs_report.py`` renders it
+    with open("BENCH_obs.json", "w") as f:
+        json.dump(
+            {
+                "bench": "graph_reachability/obs",
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "quick": quick,
+                "graphs": obs_dumps,
+            },
+            f,
+            indent=2,
+        )
+    print(f"# build telemetry -> BENCH_obs.json ({len(obs_dumps)} graphs)",
           file=sys.stderr)
     return rows
 

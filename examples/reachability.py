@@ -156,4 +156,28 @@ assert g4.get_path_batch(us[:4], vs[:4]) == g1.get_path_batch(us[:4], vs[:4])
 print(f"4-shard graph: edge-op load per shard {loads.tolist()} "
       f"(hash-prefix balance), per-shard e_caps "
       f"{[s.e_capacity for s in g4.shards]}, all answers == 1-shard graph")
+
+# wait-free telemetry (repro.obs, docs/OBSERVABILITY.md): replay the same
+# stream through an instrumented 2-shard graph — every metric is derived
+# from arrays the jitted programs already compute, so obs on/off is
+# byte-identical (tests/test_obs.py pins it); the registry collects the
+# FPSP fast/slow lane split, claim-round histograms (the helping-bound
+# witness), per-phase spans of the sharded pipeline, and probe-chain
+# health over the final tables
+from repro.obs import fastpath_frac
+
+gobs = WaitFreeGraph(v_capacity=256, e_capacity=1024, mode="fpsp",
+                     n_shards=2, obs=True)
+for ops, us_b, vs_b in stream:
+    gobs.apply(ops, us_b, vs_b)
+assert np.array_equal(gobs.reachable(us, vs), g1.reachable(us, vs))
+probe = gobs.probe_health()
+dump = gobs.obs.dump()
+rounds = gobs.obs.hist_counts("engine.claim_rounds")
+print(f"telemetry: fastpath_frac={fastpath_frac(gobs.obs):.3f}, "
+      f"claim rounds {rounds} (p99={gobs.obs.percentile('engine.claim_rounds', 99):.0f}), "
+      f"vertex probe hist {probe['vertex']}")
+print(f"telemetry: phases timed: "
+      f"{[k for k in dump['spans'] if k.startswith('phase.')]}"
+      f" -> render any dump with tools/obs_report.py")
 print("all traversal answers match the sequential oracle")

@@ -35,6 +35,7 @@ from .types import (
     OP_CONTAINS_VERTEX,
     OP_REMOVE_EDGE,
     OP_REMOVE_VERTEX,
+    N_STATS,
     ApplyResult,
     GraphState,
     OpBatch,
@@ -85,14 +86,16 @@ def apply_lockfree(state: GraphState, batch: OpBatch) -> ApplyResult:
         # requires no *lower* phase there)
         winner = v_win | e_win
 
-        st, win_success, over = _fast_apply(st, batch, winner)
+        st, win_success, over, _, _ = _fast_apply(st, batch, winner)
         success = jnp.where(winner, win_success, success)
         pending = pending & ~winner
         return (st, success, pending, overflow | over, rounds + 1)
 
     init = (state, jnp.zeros((n,), bool), real, jnp.array(False), jnp.int32(0))
     st, success, pending, overflow, rounds = jax.lax.while_loop(cond, body, init)
-    stats = jnp.stack([rounds, jnp.int32(0), jnp.int32(0), jnp.int32(0)])
+    # stats[0] = optimistic retry rounds (the lock-freedom-not-wait-freedom
+    # witness the contention tests pin); remaining slots unused
+    stats = jnp.zeros((N_STATS,), jnp.int32).at[0].set(rounds)
     return ApplyResult(state=st, success=success, ok=~overflow, stats=stats)
 
 
@@ -105,13 +108,13 @@ def apply_serial(state: GraphState, batch: OpBatch) -> ApplyResult:
     def step(st, xs):
         op1, u1, v1, ph1 = xs
         one = OpBatch(op=op1[None], u=u1[None], v=v1[None], phase=ph1[None])
-        st, succ, over = _fast_apply(st, one, jnp.ones((1,), bool))
+        st, succ, over, _, _ = _fast_apply(st, one, jnp.ones((1,), bool))
         return st, (succ[0], over)
 
     state, (success, overs) = jax.lax.scan(
         step, state, (batch.op, batch.u, batch.v, batch.phase)
     )
-    stats = jnp.zeros((4,), jnp.int32)
+    stats = jnp.zeros((N_STATS,), jnp.int32)
     return ApplyResult(state=state, success=success, ok=~jnp.any(overs), stats=stats)
 
 
@@ -122,7 +125,7 @@ def apply_serial(state: GraphState, batch: OpBatch) -> ApplyResult:
 @jax.jit
 def _apply_one(state: GraphState, op, u, v, phase):
     one = OpBatch(op=op[None], u=u[None], v=v[None], phase=phase[None])
-    st, succ, over = _fast_apply(state, one, jnp.ones((1,), bool))
+    st, succ, over, _, _ = _fast_apply(state, one, jnp.ones((1,), bool))
     return st, succ[0], over
 
 
@@ -141,7 +144,7 @@ def apply_coarse(state: GraphState, batch: OpBatch) -> ApplyResult:
         state=state,
         success=jnp.asarray(success),
         ok=jnp.array(not overflow),
-        stats=jnp.zeros((4,), jnp.int32),
+        stats=jnp.zeros((N_STATS,), jnp.int32),
     )
 
 

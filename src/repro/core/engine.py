@@ -137,7 +137,9 @@ def _vertex_wave(state: GraphState, batch: OpBatch):
     # even when finally dead — the tombstone pins the incarnation so stale
     # edges bound during this batch can never be revived by a later AddVertex.
     need_insert = last & s_isv & ~s_found & (inc_after >= 0)
-    v_key_col, new_slots, ins_overflow = claim_vertex_slots(v_key_col, s_key, need_insert)
+    v_key_col, new_slots, ins_overflow, rounds = claim_vertex_slots(
+        v_key_col, s_key, need_insert
+    )
     islot = jnp.where(need_insert & (new_slots >= 0), new_slots, v_key_col.shape[0])
     v_live = v_live.at[islot].set(live_after, mode="drop")
     v_inc = v_inc.at[islot].set(inc_after, mode="drop")
@@ -153,7 +155,7 @@ def _vertex_wave(state: GraphState, batch: OpBatch):
 
     overflow = loc.overflow | ins_overflow
     n_inserted = jnp.sum(need_insert & (new_slots >= 0)).astype(jnp.int32)
-    return state, results, (ev_live, ev_inc), overflow, n_inserted
+    return state, results, (ev_live, ev_inc), overflow, n_inserted, rounds
 
 
 # ---------------------------------------------------------------------------
@@ -311,7 +313,7 @@ def _edge_wave(state: GraphState, batch: OpBatch, is_eop, endpoint):
     e_bv = e_bv.at[wslot].set(fin_bv, mode="drop")
 
     need_insert = last & s_ise & ~s_found & fin_valid
-    e_ku_col, e_kv_col, new_slots, ins_overflow = claim_edge_slots(
+    e_ku_col, e_kv_col, new_slots, ins_overflow, rounds = claim_edge_slots(
         e_ku_col, e_kv_col, s_ku, s_kv, need_insert
     )
     islot = jnp.where(need_insert & (new_slots >= 0), new_slots, cap)
@@ -325,7 +327,7 @@ def _edge_wave(state: GraphState, batch: OpBatch, is_eop, endpoint):
     results = jnp.zeros((n,), bool).at[perm].set(success)
     overflow = loc.overflow | ins_overflow
     n_inserted = jnp.sum(need_insert & (new_slots >= 0)).astype(jnp.int32)
-    return state, results, overflow, n_inserted
+    return state, results, overflow, n_inserted, rounds
 
 
 # ---------------------------------------------------------------------------
@@ -342,18 +344,31 @@ def apply_batch(state: GraphState, batch: OpBatch) -> ApplyResult:
     is_eop = (op == OP_ADD_EDGE) | (op == OP_REMOVE_EDGE) | (op == OP_CONTAINS_EDGE)
 
     pre_state = state
-    state, v_results, (ev_live, ev_inc), v_over, v_ins = _vertex_wave(state, batch)
+    state, v_results, (ev_live, ev_inc), v_over, v_ins, v_rounds = _vertex_wave(
+        state, batch
+    )
     # stabbing wave must read *pre-batch* init states (head queries precede
     # all in-batch transitions of their key), so pass the pre-wave table.
     endpoint, s_over = _stabbing_wave(pre_state, batch, is_eop, ev_live, ev_inc, is_vop)
-    state, e_results, e_over, e_ins = _edge_wave(state, batch, is_eop, endpoint)
+    state, e_results, e_over, e_ins, e_rounds = _edge_wave(state, batch, is_eop, endpoint)
 
     success = jnp.where(is_vop, v_results, jnp.where(is_eop, e_results, False))
     ok = ~(v_over | s_over | e_over)
 
-    # conflict count (for fast-path stats): ops whose key collides in-batch
+    # stats the waves compute anyway (see types.STAT_*); the obs layer reads
+    # them host-side — slots 0-2 (conflict split) are FPSP-only and stay 0
+    zero = jnp.int32(0)
     stats = jnp.stack(
-        [jnp.int32(0), jnp.int32(0), jnp.int32(0), (v_ins + e_ins).astype(jnp.int32)]
+        [
+            zero,
+            zero,
+            zero,
+            (v_ins + e_ins).astype(jnp.int32),
+            zero,
+            jnp.sum(is_vop).astype(jnp.int32),
+            jnp.sum(is_eop).astype(jnp.int32),
+            (v_rounds + e_rounds).astype(jnp.int32),
+        ]
     )
     return ApplyResult(state=state, success=success, ok=ok, stats=stats)
 
@@ -379,10 +394,17 @@ def apply_batch(state: GraphState, batch: OpBatch) -> ApplyResult:
 @jax.jit
 def settle_vertices(state: GraphState, batch: OpBatch):
     """Vertex wave as a standalone pass.  Returns ``(state', results,
-    ev_live, ev_inc, overflow)`` — the ev arrays are the per-lane post-op
-    (live, inc) transition payloads the stabbing wave consumes."""
-    state, results, (ev_live, ev_inc), overflow, _ = _vertex_wave(state, batch)
-    return state, results, ev_live, ev_inc, overflow
+    ev_live, ev_inc, overflow, stats)`` — the ev arrays are the per-lane
+    post-op (live, inc) transition payloads the stabbing wave consumes;
+    ``stats`` is ``i32[3]: [n_inserted, claim_rounds, n_vops]`` (the obs
+    layer's per-shard vertex-wave counters)."""
+    op = batch.op
+    is_vop = (op == OP_ADD_VERTEX) | (op == OP_REMOVE_VERTEX) | (op == OP_CONTAINS_VERTEX)
+    state, results, (ev_live, ev_inc), overflow, n_ins, rounds = _vertex_wave(
+        state, batch
+    )
+    stats = jnp.stack([n_ins, rounds, jnp.sum(is_vop).astype(jnp.int32)])
+    return state, results, ev_live, ev_inc, overflow, stats
 
 
 @jax.jit
@@ -421,10 +443,14 @@ def settle_edges(
     v_inc: jnp.ndarray,
 ):
     """Edge wave as a standalone pass, fed externally gathered endpoint
-    answers.  Returns ``(state', results, overflow)``."""
+    answers.  Returns ``(state', results, overflow, stats)`` with ``stats``
+    = ``i32[4]: [n_edge_dup, n_inserted, claim_rounds, n_eops]`` (dup is
+    FPSP-only and stays 0 here — same layout as the FPSP twin so the
+    sharded pipeline unpacks both identically)."""
     op = batch.op
     is_eop = (op == OP_ADD_EDGE) | (op == OP_REMOVE_EDGE) | (op == OP_CONTAINS_EDGE)
-    state, results, overflow, _ = _edge_wave(
+    state, results, overflow, n_ins, rounds = _edge_wave(
         state, batch, is_eop, (u_live, u_inc, v_live, v_inc)
     )
-    return state, results, overflow
+    stats = jnp.stack([jnp.int32(0), n_ins, rounds, jnp.sum(is_eop).astype(jnp.int32)])
+    return state, results, overflow, stats

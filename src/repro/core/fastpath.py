@@ -34,7 +34,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import engine
+from . import engine, types
 from .locate import claim_edge_slots, claim_vertex_slots, locate_edges, locate_vertices
 from .types import (
     ABSENT_INC,
@@ -113,12 +113,14 @@ def _conflict_mask(batch: OpBatch):
     # edge op conflicts: duplicate (u,v), or any vertex op on either endpoint
     # (paper Fig. 3: a concurrent vertex op moves the edge op's linearization
     # point, so those must go through the phase-ordered slow path)
-    e_conf = is_eop & (
-        _edge_dup_mask(u, v, is_eop)
-        | (_membership_count(u, u, is_vop) > 0)
-        | (_membership_count(v, u, is_vop) > 0)
+    edge_dup = is_eop & _edge_dup_mask(u, v, is_eop)
+    e_conf = edge_dup | (
+        is_eop
+        & ((_membership_count(u, u, is_vop) > 0) | (_membership_count(v, u, is_vop) > 0))
     )
-    return (v_conf | e_conf) & (is_vop | is_eop), is_vop, is_eop
+    # the per-reason masks (v_conf / e_conf / edge_dup) feed the stats
+    # vector: the obs layer splits the slow-path trigger count by cause
+    return (v_conf | e_conf) & (is_vop | is_eop), is_vop, is_eop, v_conf, e_conf, edge_dup
 
 
 def _fast_apply(state: GraphState, batch: OpBatch, fast: jnp.ndarray):
@@ -153,7 +155,7 @@ def _fast_apply(state: GraphState, batch: OpBatch, fast: jnp.ndarray):
     # brand-new keys (not found): insert via scatter-claim (keys unique by
     # construction of the fast set)
     need_ins = addv & v_success & ~vloc.found
-    v_key_new, new_slots, v_over = claim_vertex_slots(
+    v_key_new, new_slots, v_over, v_rounds = claim_vertex_slots(
         state.v_key, jnp.where(need_ins, u, _INT32_MAX), need_ins
     )
     islot = jnp.where(need_ins & (new_slots >= 0), new_slots, cap)
@@ -201,7 +203,7 @@ def _fast_apply(state: GraphState, batch: OpBatch, fast: jnp.ndarray):
     e_bv_new = state.e_inc_v.at[ewslot].set(v_inc, mode="drop")
 
     e_need_ins = adde & e_success & ~eloc.found
-    e_ku_new, e_kv_new, e_new_slots, e_over = claim_edge_slots(
+    e_ku_new, e_kv_new, e_new_slots, e_over, e_rounds = claim_edge_slots(
         state.e_key_u, state.e_key_v,
         jnp.where(e_need_ins, u, _INT32_MAX), jnp.where(e_need_ins, v, _INT32_MAX),
         e_need_ins,
@@ -218,7 +220,10 @@ def _fast_apply(state: GraphState, batch: OpBatch, fast: jnp.ndarray):
 
     success = jnp.where(fv, v_success, jnp.where(fe, e_success, False))
     overflow = vloc.overflow | uloc.overflow | vloc2.overflow | eloc.overflow | v_over | e_over
-    return state, success, overflow
+    n_ins = (
+        jnp.sum(need_ins & (new_slots >= 0)) + jnp.sum(e_need_ins & (e_new_slots >= 0))
+    ).astype(jnp.int32)
+    return state, success, overflow, n_ins, v_rounds + e_rounds
 
 
 def _fast_apply_edges(state: GraphState, batch: OpBatch, fe, endpoint):
@@ -261,7 +266,7 @@ def _fast_apply_edges(state: GraphState, batch: OpBatch, fe, endpoint):
     e_bv_new = state.e_inc_v.at[ewslot].set(v_inc, mode="drop")
 
     e_need_ins = adde & e_success & ~eloc.found
-    e_ku_new, e_kv_new, e_new_slots, e_over = claim_edge_slots(
+    e_ku_new, e_kv_new, e_new_slots, e_over, e_rounds = claim_edge_slots(
         state.e_key_u, state.e_key_v,
         jnp.where(e_need_ins, u, _INT32_MAX), jnp.where(e_need_ins, v, _INT32_MAX),
         e_need_ins,
@@ -275,7 +280,8 @@ def _fast_apply_edges(state: GraphState, batch: OpBatch, fe, endpoint):
         e_key_u=e_ku_new, e_key_v=e_kv_new,
         e_live=e_live_new, e_inc_u=e_bu_new, e_inc_v=e_bv_new,
     )
-    return state, e_success, eloc.overflow | e_over
+    n_ins = jnp.sum(e_need_ins & (e_new_slots >= 0)).astype(jnp.int32)
+    return state, e_success, eloc.overflow | e_over, n_ins, e_rounds
 
 
 @jax.jit
@@ -292,38 +298,62 @@ def settle_edges_fpsp(
     shard's sub-batch take the sort-free direct path (the stab answers
     stand in for the endpoint table reads), and only duplicate-key groups
     pay the phase-ordered epoch scan.  Returns ``(state', results,
-    overflow)``, exactly the FPSP conflict semantics on the sub-batch."""
+    overflow, stats)`` with ``stats`` = ``i32[4]: [n_edge_dup, n_inserted,
+    claim_rounds, n_eops]`` (same layout as
+    :func:`repro.core.engine.settle_edges`, so the sharded pipeline unpacks
+    both identically) — exactly the FPSP conflict semantics on the
+    sub-batch."""
     op = batch.op
     is_eop = (op == OP_ADD_EDGE) | (op == OP_REMOVE_EDGE) | (op == OP_CONTAINS_EDGE)
     conflicted = is_eop & _edge_dup_mask(batch.u, batch.v, is_eop)
     fast = is_eop & ~conflicted
     endpoint = (u_live, u_inc, v_live, v_inc)
 
-    state, fast_success, fast_over = _fast_apply_edges(state, batch, fast, endpoint)
+    state, fast_success, fast_over, fast_ins, fast_rounds = _fast_apply_edges(
+        state, batch, fast, endpoint
+    )
 
     n_conf = jnp.sum(conflicted).astype(jnp.int32)
 
     def slow(st):
         masked = batch._replace(op=jnp.where(conflicted, batch.op, OP_NOP))
         is_eop_m = conflicted
-        return engine._edge_wave(st, masked, is_eop_m, endpoint)[:3]
+        return engine._edge_wave(st, masked, is_eop_m, endpoint)
 
     def skip(st):
-        return st, jnp.zeros((batch.size,), bool), jnp.array(False)
+        return (
+            st,
+            jnp.zeros((batch.size,), bool),
+            jnp.array(False),
+            jnp.int32(0),
+            jnp.int32(0),
+        )
 
-    state, slow_success, slow_over = jax.lax.cond(n_conf > 0, slow, skip, state)
+    state, slow_success, slow_over, slow_ins, slow_rounds = jax.lax.cond(
+        n_conf > 0, slow, skip, state
+    )
     success = jnp.where(fast, fast_success, slow_success)
-    return state, success, fast_over | slow_over
+    stats = jnp.stack(
+        [
+            n_conf,
+            fast_ins + slow_ins,
+            fast_rounds + slow_rounds,
+            jnp.sum(is_eop).astype(jnp.int32),
+        ]
+    )
+    return state, success, fast_over | slow_over, stats
 
 
 @jax.jit
 def apply_batch_fpsp(state: GraphState, batch: OpBatch) -> ApplyResult:
     """Fast-path-slow-path: vectorized direct apply for conflict-free ops,
     full wait-free engine only for the conflicted remainder."""
-    conflicted, is_vop, is_eop = _conflict_mask(batch)
+    conflicted, is_vop, is_eop, v_conf, e_conf, edge_dup = _conflict_mask(batch)
     fast = (is_vop | is_eop) & ~conflicted
 
-    state, fast_success, fast_over = _fast_apply(state, batch, fast)
+    state, fast_success, fast_over, fast_ins, fast_rounds = _fast_apply(
+        state, batch, fast
+    )
 
     # slow path: mask fast ops to NOP; cond skips it when nothing conflicts
     n_conf = jnp.sum(conflicted).astype(jnp.int32)
@@ -339,13 +369,25 @@ def apply_batch_fpsp(state: GraphState, batch: OpBatch) -> ApplyResult:
             state=st,
             success=jnp.zeros((b.size,), bool),
             ok=jnp.array(True),
-            stats=jnp.zeros((4,), jnp.int32),
+            stats=jnp.zeros((types.N_STATS,), jnp.int32),
         )
 
     res = jax.lax.cond(n_conf > 0, slow, skip, (state, batch))
 
     success = jnp.where(fast, fast_success, res.success)
-    stats = res.stats.at[0].set(n_conf)
+    # stats (see types.STAT_*): the slow engine's inserted/rounds counters
+    # accumulate with the fast lane's; the conflict split and the lane
+    # totals are full-batch quantities, so they overwrite the masked-batch
+    # values the slow pass saw
+    stats = res.stats
+    stats = stats.at[types.STAT_CONFLICTED].set(n_conf)
+    stats = stats.at[types.STAT_V_CONFLICTS].set(jnp.sum(v_conf).astype(jnp.int32))
+    stats = stats.at[types.STAT_E_CONFLICTS].set(jnp.sum(e_conf).astype(jnp.int32))
+    stats = stats.at[types.STAT_INSERTED].add(fast_ins)
+    stats = stats.at[types.STAT_EDGE_DUP].set(jnp.sum(edge_dup).astype(jnp.int32))
+    stats = stats.at[types.STAT_VOPS].set(jnp.sum(is_vop).astype(jnp.int32))
+    stats = stats.at[types.STAT_EOPS].set(jnp.sum(is_eop).astype(jnp.int32))
+    stats = stats.at[types.STAT_CLAIM_ROUNDS].add(fast_rounds)
     return ApplyResult(
         state=res.state, success=success, ok=res.ok & ~fast_over, stats=stats
     )

@@ -14,6 +14,11 @@ regardless of when growth happens.
 Deterministic by construction: given the same op stream, every host/device
 computes the identical table — this is what the serving engine relies on for
 coordination-free multi-host page tables.
+
+Telemetry (``obs=`` / ``REPRO_OBS``) hangs off every public entry point:
+per-phase spans, fast-path/claim-round counters, growth events — all derived
+from stats the jitted passes compute anyway, so enabling it never perturbs
+results.  Metric catalog and overhead contract: ``docs/OBSERVABILITY.md``.
 """
 
 from __future__ import annotations
@@ -24,6 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# obs.metrics imports nothing from repro.core, so this is cycle-free even
+# though repro.core.__init__ imports this module (see repro.obs docstring)
+from ..obs import metrics as obsm
 from . import engine, fastpath, maintenance, sharding, traversal
 from .types import (
     EDGE_OPS,
@@ -35,6 +43,14 @@ from .types import (
     OP_CONTAINS_VERTEX,
     OP_REMOVE_EDGE,
     OP_REMOVE_VERTEX,
+    STAT_CLAIM_ROUNDS,
+    STAT_CONFLICTED,
+    STAT_E_CONFLICTS,
+    STAT_EDGE_DUP,
+    STAT_EOPS,
+    STAT_INSERTED,
+    STAT_V_CONFLICTS,
+    STAT_VOPS,
     GraphState,
     OpBatch,
     is_pow2,
@@ -78,12 +94,21 @@ def _rehash_escalating(
     ``MAX_PROBES``, so should a chain overflow it (a key the engines could
     never locate again), the capacities double and the compaction retries.
     Returns ``(new_state, csr_or_None)``."""
-    for _ in range(_MAX_GROW_ATTEMPTS):
+    for attempt in range(_MAX_GROW_ATTEMPTS):
         new_state, csr, ok = maintenance.rehash(
             state, new_vcap, new_ecap, impl=impl, with_csr=with_csr
         )
         if ok:
             return new_state, csr
+        # escalation: placement overflowed even at the doubled capacity —
+        # rare enough to log as a structured event, not just a counter
+        obsm.counter("growth.escalations")
+        obsm.event(
+            "growth.escalation",
+            attempt=attempt,
+            v_capacity=new_vcap,
+            e_capacity=new_ecap,
+        )
         new_vcap *= 2
         new_ecap *= 2
     raise RuntimeError("rehash placement did not converge")
@@ -130,6 +155,14 @@ class WaitFreeGraph:
     auto: device on TPU, host elsewhere.  All impls produce bit-identical
     tables, so the flag is purely a performance knob.
 
+    ``obs`` enables wait-free telemetry (:mod:`repro.obs`): ``None`` defers
+    to the ``REPRO_OBS`` env var, ``True`` attaches a fresh
+    :class:`repro.obs.Registry`, ``False`` forces the zero-cost no-op, and
+    a registry instance is shared as-is.  Every metric is derived from
+    arrays the jitted programs compute regardless, so the flag never
+    changes graph state or query answers (bit-identity pinned by
+    ``tests/test_obs.py``); catalog in ``docs/OBSERVABILITY.md``.
+
     ``n_shards`` hash-prefix-partitions *both* tables into that many
     per-shard states — each shard owns ``1/n_shards`` of the vertex key
     space and of the edge key space (O(N/S) memory per shard), with ops
@@ -155,6 +188,7 @@ class WaitFreeGraph:
         maintenance_impl: Optional[str] = None,
         n_shards: int = 1,
         mesh=None,
+        obs=None,
     ):
         assert mode in ("waitfree", "fpsp")
         assert csr_maintenance in ("delta", "rebuild")
@@ -184,6 +218,7 @@ class WaitFreeGraph:
         self.traversal_impl = traversal_impl
         self.csr_maintenance = csr_maintenance
         self.maintenance_impl = maintenance_impl
+        self.obs = obsm.resolve(obs)
         self._phase = 0  # the paper's maxPhase counter
 
     @property
@@ -237,8 +272,21 @@ class WaitFreeGraph:
         ops0 = np.asarray(ops, np.int32)
         us0 = np.asarray(us, np.int32)
         vs0 = np.zeros_like(us0) if vs is None else np.asarray(vs, np.int32)
-        if self.n_shards > 1:
-            return self._apply_sharded(ops0, us0, vs0)
+        reg = self.obs
+        with obsm.use(reg):
+            reg.counter("apply.batches")
+            reg.counter("apply.ops", n)
+            reg.hist("apply.batch_size", n)
+            if self.n_shards > 1:
+                with reg.span("graph.apply_sharded"):
+                    return self._apply_sharded(ops0, us0, vs0)
+            with reg.span("graph.apply"):
+                return self._apply_dense(ops0, us0, vs0)
+
+    def _apply_dense(self, ops0, us0, vs0) -> np.ndarray:
+        """The ``n_shards == 1`` engine dispatch behind :meth:`apply` (runs
+        inside the obs ``use`` scope the wrapper installed)."""
+        n = ops0.shape[0]
         mutating = bool(np.isin(ops0, _MUTATING_OPS).any())
         saved_csr = None if mutating else self._csr
         # the pending-delta queue (base snapshot + unpadded batches since the
@@ -266,6 +314,11 @@ class WaitFreeGraph:
             pre = self.state
             res = apply_fn(pre, batch)
             if bool(res.ok) and not self._needs_growth(res.state):
+                # the successful attempt alone feeds the obs counters —
+                # discarded growth attempts re-run the same lanes and would
+                # double-count them
+                if self.obs.enabled:
+                    self._record_engine_stats(self.obs, res.stats)
                 grow_csr = self._grow_csr
                 self.state = res.state
                 if attempt > 0:
@@ -306,6 +359,47 @@ class WaitFreeGraph:
             self.state = self._grow(pre)
         raise RuntimeError("graph growth did not converge")
 
+    def _record_engine_stats(self, reg, stats) -> None:
+        """Fold one successful engine pass's stats vector (types.STAT_*)
+        into the registry — the single host-side device read obs adds, and
+        only when a live registry is attached."""
+        s = [int(x) for x in np.asarray(stats)]
+        reg.counter("engine.inserted", s[STAT_INSERTED])
+        reg.counter("engine.vops", s[STAT_VOPS])
+        reg.counter("engine.eops", s[STAT_EOPS])
+        reg.hist("engine.claim_rounds", s[STAT_CLAIM_ROUNDS])
+        if self.mode == "fpsp":
+            reg.counter("fastpath.ops", s[STAT_VOPS] + s[STAT_EOPS])
+            reg.counter("fastpath.vops", s[STAT_VOPS])
+            reg.counter("fastpath.eops", s[STAT_EOPS])
+            reg.counter("fastpath.conflicted", s[STAT_CONFLICTED])
+            reg.counter("fastpath.vertex_conflicts", s[STAT_V_CONFLICTS])
+            reg.counter("fastpath.edge_conflicts", s[STAT_E_CONFLICTS])
+            reg.counter("fastpath.edge_dup", s[STAT_EDGE_DUP])
+            reg.counter(
+                "fastpath.slow_batches" if s[STAT_CONFLICTED] else "fastpath.fast_batches"
+            )
+
+    def _record_sharded_stats(self, reg, v_stats, e_stats) -> None:
+        """Per-shard twin of :meth:`_record_engine_stats`: fold the
+        ``settle_vertices``/``settle_edges`` stats vectors of one successful
+        sharded attempt.  The edge-lane fastpath counters sum to the same
+        totals for any shard count (duplicate ``(u, v)`` lanes co-locate on
+        one shard) — the shard-invariance ``tests/test_obs.py`` pins."""
+        for v_st, e_st in zip(v_stats, e_stats):
+            v_ins, v_rounds, n_vops = (int(x) for x in np.asarray(v_st))
+            e_dup, e_ins, e_rounds, n_eops = (int(x) for x in np.asarray(e_st))
+            reg.counter("engine.inserted", v_ins + e_ins)
+            reg.counter("engine.vops", n_vops)
+            reg.counter("engine.eops", n_eops)
+            reg.hist("engine.claim_rounds", v_rounds + e_rounds)
+            if self.mode == "fpsp":
+                reg.counter("fastpath.eops", n_eops)
+                reg.counter("fastpath.edge_dup", e_dup)
+                reg.counter(
+                    "fastpath.slow_batches" if e_dup else "fastpath.fast_batches"
+                )
+
     def _needs_growth(self, state: GraphState) -> bool:
         v, e, v_used, e_used = _live_counts(state)
         return bool(v_used > GROW_LOAD_FACTOR * state.v_capacity) or bool(
@@ -327,6 +421,17 @@ class WaitFreeGraph:
             new_vcap *= 2
             new_ecap *= 2
         impl = maintenance.resolve_impl(self.maintenance_impl)
+        if self.obs.enabled:
+            self.obs.counter("growth.events")
+            self.obs.event(
+                "growth.grow",
+                v_before=state.v_capacity,
+                v_after=new_vcap,
+                e_before=state.e_capacity,
+                e_after=new_ecap,
+                v_live=int(v),
+                e_live=int(e),
+            )
         # snapshot-compact rides the device pass nearly free; on the host it
         # would be an eager build_csr per grow attempt — leave that lazy
         with_csr = impl != "host" and self.csr_maintenance == "delta"
@@ -385,14 +490,22 @@ class WaitFreeGraph:
         pre-states, and re-runs the same batch at the same phases."""
         n = ops0.shape[0]
         S = self.n_shards
+        reg = self.obs
         mutating = bool(np.isin(ops0, _MUTATING_OPS).any())
         saved_csr = None if mutating else self._csr
-        shard_idx, _ = sharding.route_ops(ops0, us0, vs0, S)
-        phases0 = (self._phase + np.arange(n)).astype(np.int32)
-        self._phase += n
-        batches = [
-            self._sub_batch(ops0, us0, vs0, phases0, idx) for idx in shard_idx
-        ]
+        with reg.span("phase.route"):
+            shard_idx, _ = sharding.route_ops(ops0, us0, vs0, S)
+            phases0 = (self._phase + np.arange(n)).astype(np.int32)
+            self._phase += n
+            batches = [
+                self._sub_batch(ops0, us0, vs0, phases0, idx) for idx in shard_idx
+            ]
+        if reg.enabled:
+            sizes = [int(idx.size) for idx in shard_idx]
+            reg.hist("shard.subbatch_size", sizes)
+            if sum(sizes):
+                # max-over-mean routed load: 1.0 = perfectly balanced
+                reg.gauge("shard.balance", max(sizes) * S / sum(sizes))
 
         # stab queries: two (endpoint, phase) probes per edge lane, routed
         # to the endpoint's owner shard (fixed across growth attempts —
@@ -403,6 +516,9 @@ class WaitFreeGraph:
         q_phases = np.concatenate([phases0[eidx], phases0[eidx]])
         q_owner = sharding.shard_of_vertices(q_keys, S)
         q_sel = [np.flatnonzero(q_owner == t) for t in range(S)]
+        if reg.enabled:
+            reg.counter("stab.queries", 2 * ne)
+            reg.hist("shard.stab_fanout", [int(sel.size) for sel in q_sel])
         q_pads = [
             (
                 traversal._pad_pow2(q_keys[sel], _INT32_MAX),
@@ -420,73 +536,86 @@ class WaitFreeGraph:
             ok = True
 
             # A. vertex settlement per shard
-            states_a, v_res, evs = [], [], []
-            for s in range(S):
-                st, res, ev_l, ev_i, over = engine.settle_vertices(pre[s], batches[s])
-                ok &= not bool(over)
-                states_a.append(st)
-                v_res.append(res)
-                evs.append((ev_l, ev_i))
+            with reg.span("phase.settle_vertices"):
+                states_a, v_res, evs, v_stats = [], [], [], []
+                for s in range(S):
+                    st, res, ev_l, ev_i, over, v_st = engine.settle_vertices(
+                        pre[s], batches[s]
+                    )
+                    ok &= not bool(over)
+                    states_a.append(st)
+                    v_res.append(res)
+                    evs.append((ev_l, ev_i))
+                    v_stats.append(v_st)
 
             # B. stabbing wave: owner shards answer, host gathers
-            q_live = np.zeros(2 * ne, bool)
-            q_inc = np.zeros(2 * ne, np.int32)
-            for t in range(S):
-                sel = q_sel[t]
-                if sel.size == 0:
-                    continue
-                qk, qp = q_pads[t]
-                live, inc, over = engine.answer_stabs(
-                    pre[t], batches[t], evs[t][0], evs[t][1],
-                    jnp.asarray(qk), jnp.asarray(qp),
-                )
-                ok &= not bool(over)
-                q_live[sel] = np.asarray(live)[: sel.size]
-                q_inc[sel] = np.asarray(inc)[: sel.size]
-            u_live = np.zeros(n, bool)
-            u_inc = np.zeros(n, np.int32)
-            v_live = np.zeros(n, bool)
-            v_inc = np.zeros(n, np.int32)
-            u_live[eidx] = q_live[:ne]
-            u_inc[eidx] = q_inc[:ne]
-            v_live[eidx] = q_live[ne:]
-            v_inc[eidx] = q_inc[ne:]
+            with reg.span("phase.answer_stabs"):
+                q_live = np.zeros(2 * ne, bool)
+                q_inc = np.zeros(2 * ne, np.int32)
+                for t in range(S):
+                    sel = q_sel[t]
+                    if sel.size == 0:
+                        continue
+                    qk, qp = q_pads[t]
+                    live, inc, over = engine.answer_stabs(
+                        pre[t], batches[t], evs[t][0], evs[t][1],
+                        jnp.asarray(qk), jnp.asarray(qp),
+                    )
+                    ok &= not bool(over)
+                    q_live[sel] = np.asarray(live)[: sel.size]
+                    q_inc[sel] = np.asarray(inc)[: sel.size]
+            with reg.span("phase.gather"):
+                u_live = np.zeros(n, bool)
+                u_inc = np.zeros(n, np.int32)
+                v_live = np.zeros(n, bool)
+                v_inc = np.zeros(n, np.int32)
+                u_live[eidx] = q_live[:ne]
+                u_inc[eidx] = q_inc[:ne]
+                v_live[eidx] = q_live[ne:]
+                v_inc[eidx] = q_inc[ne:]
 
             # C. edge settlement per shard, fed the gathered answers
-            out = np.zeros(n, bool)
-            states_c = []
-            for s in range(S):
-                idx = shard_idx[s]
-                m = idx.size
-                bucket = batches[s].size
-                ul = np.zeros(bucket, bool)
-                ui = np.zeros(bucket, np.int32)
-                vl = np.zeros(bucket, bool)
-                vi = np.zeros(bucket, np.int32)
-                ul[:m] = u_live[idx]
-                ui[:m] = u_inc[idx]
-                vl[:m] = v_live[idx]
-                vi[:m] = v_inc[idx]
-                st, e_res, over = settle_edges_fn(
-                    states_a[s], batches[s],
-                    jnp.asarray(ul), jnp.asarray(ui),
-                    jnp.asarray(vl), jnp.asarray(vi),
-                )
-                ok &= not bool(over)
-                states_c.append(st)
-                if m:
-                    out[idx] = (
-                        np.asarray(v_res[s])[:m] | np.asarray(e_res)[:m]
+            with reg.span("phase.settle_edges"):
+                out = np.zeros(n, bool)
+                states_c, e_stats = [], []
+                for s in range(S):
+                    idx = shard_idx[s]
+                    m = idx.size
+                    bucket = batches[s].size
+                    ul = np.zeros(bucket, bool)
+                    ui = np.zeros(bucket, np.int32)
+                    vl = np.zeros(bucket, bool)
+                    vi = np.zeros(bucket, np.int32)
+                    ul[:m] = u_live[idx]
+                    ui[:m] = u_inc[idx]
+                    vl[:m] = v_live[idx]
+                    vi[:m] = v_inc[idx]
+                    st, e_res, over, e_st = settle_edges_fn(
+                        states_a[s], batches[s],
+                        jnp.asarray(ul), jnp.asarray(ui),
+                        jnp.asarray(vl), jnp.asarray(vi),
                     )
+                    ok &= not bool(over)
+                    states_c.append(st)
+                    e_stats.append(e_st)
+                    if m:
+                        out[idx] = (
+                            np.asarray(v_res[s])[:m] | np.asarray(e_res)[:m]
+                        )
 
             if ok and not self._needs_growth_sharded(states_c):
                 self.shards = states_c
+                # successful attempt only — retried attempts would
+                # double-count lanes (see _apply_dense)
+                if reg.enabled:
+                    self._record_sharded_stats(reg, v_stats, e_stats)
                 if not mutating:
                     # abstractly identical pre/post state: the cached fused
                     # snapshot stays exactly as valid as before the batch
                     self._csr = saved_csr
                 return out
-            self.shards = self._grow_shards(pre)
+            with reg.span("phase.compact"):
+                self.shards = self._grow_shards(pre)
         raise RuntimeError("graph growth did not converge")
 
     def _needs_growth_sharded(self, states: List[GraphState]) -> bool:
@@ -520,6 +649,15 @@ class WaitFreeGraph:
             new_vcaps = [2 * vc for vc in new_vcaps]
             new_ecaps = [2 * ec for ec in new_ecaps]
         impl = maintenance.resolve_impl(self.maintenance_impl)
+        if self.obs.enabled:
+            self.obs.counter("growth.events")
+            self.obs.event(
+                "growth.grow_shards",
+                v_before=[st.v_capacity for st in states],
+                v_after=list(new_vcaps),
+                e_before=[st.e_capacity for st in states],
+                e_after=list(new_ecaps),
+            )
         endpoints = sharding.gather_live_vertices(states)
         for _ in range(_MAX_GROW_ATTEMPTS):
             outs = [
@@ -531,6 +669,7 @@ class WaitFreeGraph:
             oks = [bool(ok) for _, _, ok in outs]
             if all(oks):
                 return sharding.place_shards([s for s, _, _ in outs], self._mesh)
+            self.obs.counter("growth.escalations")
             new_vcaps = [2 * vc if not ok else vc for vc, ok in zip(new_vcaps, oks)]
             new_ecaps = [2 * ec if not ok else ec for ec, ok in zip(new_ecaps, oks)]
         raise RuntimeError("rehash placement did not converge")
@@ -579,22 +718,30 @@ class WaitFreeGraph:
         incremental delta fold does not apply — per-shard slot spaces are
         private, so the directory (and with it every fused slot) can move
         on any vertex churn."""
+        reg = self.obs
         if self.n_shards > 1:
             if self._csr is None:
-                self._csr = sharding.fuse_partitioned(self._shards)
+                with obsm.use(reg), reg.span("csr.fuse"):
+                    reg.counter("csr.fuse")
+                    self._csr = sharding.fuse_partitioned(self._shards)
             return self._csr
         if self._csr is None:
-            if self._delta_base is not None and self._delta_batches:
-                self._csr = traversal.apply_delta(
-                    self._delta_base,
-                    self.state,
-                    np.concatenate([b[0] for b in self._delta_batches]),
-                    np.concatenate([b[1] for b in self._delta_batches]),
-                    np.concatenate([b[2] for b in self._delta_batches]),
-                    impl=self.maintenance_impl,
-                )
-            else:
-                self._csr = traversal.build_csr(self.state)
+            with obsm.use(reg):
+                if self._delta_base is not None and self._delta_batches:
+                    with reg.span("csr.delta_fold"):
+                        reg.counter("csr.delta_fold")
+                        self._csr = traversal.apply_delta(
+                            self._delta_base,
+                            self.state,
+                            np.concatenate([b[0] for b in self._delta_batches]),
+                            np.concatenate([b[1] for b in self._delta_batches]),
+                            np.concatenate([b[2] for b in self._delta_batches]),
+                            impl=self.maintenance_impl,
+                        )
+                else:
+                    with reg.span("csr.build"):
+                        reg.counter("csr.build")
+                        self._csr = traversal.build_csr(self.state)
             self._delta_base = None
             self._delta_batches = []
         return self._csr
@@ -618,6 +765,7 @@ class WaitFreeGraph:
             raise ValueError(f"reachable: {len(us)} sources vs {len(vs)} targets")
         pu, n = self._pad_keys(us)
         pv, _ = self._pad_keys(vs)
+        self.obs.counter("query.reachable", n)
         out = np.asarray(
             traversal.reachable(self.traversal_csr(), pu, pv, impl=self.traversal_impl)
         )[:n]
@@ -633,6 +781,13 @@ class WaitFreeGraph:
         pk, n = self._pad_keys(sources)
         csr = self.traversal_csr()
         levels = np.asarray(traversal.bfs_levels(csr, pk, impl=self.traversal_impl))[:n]
+        if self.obs.enabled:
+            # frontier iterations per source = deepest reached level (the
+            # level map is computed regardless — obs only reduces it)
+            self.obs.counter("query.bfs", n)
+            self.obs.hist(
+                "bfs.depth", [int(max(row.max(initial=0), 0)) for row in levels]
+            )
         v_key = np.asarray(csr.v_key)
         out = []
         for row in levels:
@@ -644,6 +799,7 @@ class WaitFreeGraph:
         """Vertex keys within ≤k directed hops of ``u`` (including ``u``)."""
         pk, _ = self._pad_keys([u])
         csr = self.traversal_csr()
+        self.obs.counter("query.khop")
         mask = np.asarray(
             traversal.khop_mask(csr, pk, np.int32(k), impl=self.traversal_impl)
         )[0]
@@ -669,6 +825,7 @@ class WaitFreeGraph:
         pu, n = self._pad_keys(us)
         pv, _ = self._pad_keys(vs)
         csr = self.traversal_csr()
+        self.obs.counter("query.get_path", n)
         levels, parents, vslot, vlive = (
             np.asarray(x)
             for x in traversal.path_probe(csr, pu, pv, impl=self.traversal_impl)
@@ -686,6 +843,15 @@ class WaitFreeGraph:
         return out
 
     # -- introspection ------------------------------------------------------
+    def probe_health(self) -> Dict[str, Dict[int, int]]:
+        """Physical probe-chain-length histograms over both hash tables
+        (all shards), recorded into the graph's registry as ``probe.vertex``
+        / ``probe.edge`` and returned — see :mod:`repro.obs.probes` for the
+        derivation and its invariance properties."""
+        from ..obs import probes
+
+        return probes.record(self.obs, self)
+
     def snapshot(self) -> Tuple[set, set]:
         """Abstract (V, E) — for oracle comparison in tests.
 

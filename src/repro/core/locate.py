@@ -99,8 +99,9 @@ def _claim_slots(
           mutually distinct and absent from the table).
 
     Returns (updated key_cols, slots i32[n] (-1 where not wanted/failed),
-    overflow flag).  The claim is priority-ordered by query index, so the
-    outcome is deterministic and identical on every device.
+    overflow flag, rounds i32[] — scatter-claim rounds consumed, the
+    paper's helping-bound witness).  The claim is priority-ordered by query
+    index, so the outcome is deterministic and identical on every device.
     """
     n = want.shape[0]
     cap = key_cols[0].shape[0]
@@ -142,22 +143,22 @@ def _claim_slots(
         pending = pending & ~winner
         return (cols, slots, pending, rounds + 1)
 
-    cols, slots, pending, _ = jax.lax.while_loop(
+    cols, slots, pending, rounds = jax.lax.while_loop(
         cond, body, (key_cols, slots0, want, jnp.int32(0))
     )
     overflow = jnp.any(pending)
-    return cols, slots, overflow
+    return cols, slots, overflow, rounds
 
 
 def claim_vertex_slots(v_key, query_keys, want):
-    cols, slots, overflow = _claim_slots(
+    cols, slots, overflow, rounds = _claim_slots(
         (v_key,), (query_keys,), lambda q, cap: hash_vertex(q[0], cap), want
     )
-    return cols[0], slots, overflow
+    return cols[0], slots, overflow, rounds
 
 
 def claim_edge_slots(e_key_u, e_key_v, qu, qv, want):
-    cols, slots, overflow = _claim_slots(
+    cols, slots, overflow, rounds = _claim_slots(
         (e_key_u, e_key_v), (qu, qv), lambda q, cap: hash_edge(q[0], q[1], cap), want
     )
-    return cols[0], cols[1], slots, overflow
+    return cols[0], cols[1], slots, overflow, rounds

@@ -67,6 +67,11 @@ construction — except that edge validity is judged against the *global*
 sorted endpoint index (the ``endpoints`` override on :func:`rehash`):
 an edge's endpoints generally live on other shards, and a shard-local
 check would wrongly discard every cross-shard edge.
+
+Telemetry: when an obs registry is active (``repro.obs``), host placement
+records a ``maintenance.claim_rounds`` histogram and :func:`rehash` wraps
+itself in a ``maintenance.rehash.<impl>`` span — catalogued in
+``docs/OBSERVABILITY.md``.  None of it alters the computed tables.
 """
 
 from __future__ import annotations
@@ -81,6 +86,9 @@ import numpy as np
 from repro.kernels.compact import masked_compact, probe_place
 from repro.kernels.compact.ops import _resolve as _resolve_compact_impl
 
+# ambient telemetry (no-op unless a registry is active — see repro.obs;
+# metrics imports nothing from repro.core, so this is cycle-free)
+from ..obs import metrics as obsm
 from .hashing import edge_hash32_np, hash_edge, hash_vertex, vertex_hash32_np
 from .traversal import TraversalCSR, _delta_probe_parts, _edge_validity, build_csr
 from .types import ABSENT_INC, EMPTY_KEY, MAX_PROBES, GraphState
@@ -153,6 +161,9 @@ def _probe_place_host(
         slots[winner] = cand[winner]
         pending &= ~winner
         rounds += 1
+    # rounds-per-placement is the helping bound's maintenance-side twin;
+    # the loop counts them regardless — obs just files the number
+    obsm.hist("maintenance.claim_rounds", rounds)
     return slots, bool(pending.any())
 
 
@@ -424,25 +435,29 @@ def rehash(
     assert endpoints is None or not with_csr, (
         "snapshot-compact requires local endpoints"
     )
-    if impl == "host":
-        new_state, ok = rehash_host(state, new_vcap, new_ecap, endpoints)
-        csr = build_csr(new_state) if (with_csr and ok) else None
-        return new_state, csr, ok
-    prim = _primitive_impl(impl)
-    ep = None
-    if endpoints is not None:
-        # pow2-pad the sorted index so the jitted rehash compiles once per
-        # bucket (INT32_MAX keys sort to the tail and never match)
-        sk, si = endpoints
-        m = sk.shape[0]
-        bucket = max(16, 1 << max(m - 1, 1).bit_length())
-        skp = np.full(bucket, np.iinfo(np.int32).max, np.int32)
-        sip = np.full(bucket, ABSENT_INC, np.int32)
-        skp[:m] = sk
-        sip[:m] = si
-        ep = (jnp.asarray(skp), jnp.asarray(sip))
-    new_state, csr, ok = _rehash_device(state, new_vcap, new_ecap, prim, with_csr, ep)
-    return new_state, csr, bool(ok)
+    with obsm.span(f"maintenance.rehash.{impl}"):
+        obsm.counter("maintenance.rehash")
+        if impl == "host":
+            new_state, ok = rehash_host(state, new_vcap, new_ecap, endpoints)
+            csr = build_csr(new_state) if (with_csr and ok) else None
+            return new_state, csr, ok
+        prim = _primitive_impl(impl)
+        ep = None
+        if endpoints is not None:
+            # pow2-pad the sorted index so the jitted rehash compiles once per
+            # bucket (INT32_MAX keys sort to the tail and never match)
+            sk, si = endpoints
+            m = sk.shape[0]
+            bucket = max(16, 1 << max(m - 1, 1).bit_length())
+            skp = np.full(bucket, np.iinfo(np.int32).max, np.int32)
+            sip = np.full(bucket, ABSENT_INC, np.int32)
+            skp[:m] = sk
+            sip[:m] = si
+            ep = (jnp.asarray(skp), jnp.asarray(sip))
+        new_state, csr, ok = _rehash_device(
+            state, new_vcap, new_ecap, prim, with_csr, ep
+        )
+        return new_state, csr, bool(ok)
 
 
 # ---------------------------------------------------------------------------

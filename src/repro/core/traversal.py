@@ -77,6 +77,9 @@ import numpy as np
 
 from repro.kernels.frontier import NBR_INF, frontier_expand
 
+# ambient telemetry (no-op unless a registry is active — see repro.obs and
+# docs/OBSERVABILITY.md; metrics imports nothing from repro.core)
+from ..obs import metrics as obsm
 from .locate import locate_edges, locate_vertices
 from .types import (
     EMPTY_KEY,
@@ -338,6 +341,7 @@ def apply_delta(
     """
     ce = csr.e_capacity
     if state.v_capacity != csr.v_capacity or state.e_capacity != ce:
+        obsm.counter("csr.delta.rebuild_capacity_changed")
         return build_csr(state)  # rehash: every slot moved
 
     ops = np.asarray(ops, np.int32)
@@ -353,9 +357,13 @@ def apply_delta(
     e_tu = (e_code >> 32).astype(np.int32)
     e_tv = e_code.astype(np.int32)
     if v_touch.size == 0 and e_code.size == 0:
+        obsm.counter("csr.delta.readonly")
         return csr  # read-only batch: the snapshot is still exact
     if v_touch.size + e_code.size > max(32, int(max_delta_frac * ce)):
+        obsm.counter("csr.delta.rebuild_too_large")
         return build_csr(state)  # delta too large to beat the rebuild
+    obsm.counter("csr.delta.folded")
+    obsm.hist("csr.delta.touched", int(v_touch.size + e_code.size))
 
     v_pad = _pad_pow2(v_touch.astype(np.int32), int(EMPTY_KEY))
     eu_pad = _pad_pow2(e_tu, int(EMPTY_KEY))

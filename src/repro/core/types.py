@@ -55,6 +55,22 @@ MAX_INSERT_ROUNDS = 16
 GROW_LOAD_FACTOR = 0.5
 
 
+# --- Engine stats vector ------------------------------------------------------
+# Every ApplyResult carries an i32[N_STATS] vector of counters the jitted
+# programs compute anyway (mask sums, claim-round counters).  The obs layer
+# (:mod:`repro.obs`) reads them host-side after the pass — the vector is
+# always produced, so enabling observability never changes a jitted program.
+N_STATS = 8
+STAT_CONFLICTED = 0     # FPSP: ops on the slow path (lockfree: claim rounds)
+STAT_V_CONFLICTS = 1    # FPSP: vertex-lane conflict-mask hits
+STAT_E_CONFLICTS = 2    # FPSP: edge-lane conflict-mask hits
+STAT_INSERTED = 3       # new physical slots claimed this batch
+STAT_EDGE_DUP = 4       # duplicate (u, v) edge lanes (shard-invariant)
+STAT_VOPS = 5           # vertex-op lanes in the batch (non-NOP)
+STAT_EOPS = 6           # edge-op lanes in the batch (non-NOP)
+STAT_CLAIM_ROUNDS = 7   # scatter-claim rounds consumed (helping bound)
+
+
 def is_pow2(n: int) -> bool:
     """Power-of-two check shared by table capacities and shard counts (both
     must be powers of two so hash prefixes/suffixes are plain bit fields)."""
@@ -119,7 +135,7 @@ class ApplyResult(NamedTuple):
     state: GraphState
     success: jnp.ndarray   # bool[n] per-op result, original batch order
     ok: jnp.ndarray        # bool[] False => table overflow, host must grow+retry
-    stats: jnp.ndarray     # i32[4]: [n_conflicting, v_probe_max, e_probe_max, n_inserted]
+    stats: jnp.ndarray     # i32[N_STATS], indexed by the STAT_* constants
 
 
 def make_state(v_capacity: int = 1024, e_capacity: int = 4096) -> GraphState:

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.models import LM
 from repro.models.config import ArchConfig
+from repro.obs import metrics as obsm
 from repro.serving.paged_cache import PagedKVManager
 
 
@@ -43,6 +44,7 @@ class Request:
     temperature: float = 0.0                # 0 = greedy
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    submit_tick: int = -1                   # stamped by ServingEngine.submit
 
 
 class ServingEngine:
@@ -56,8 +58,13 @@ class ServingEngine:
         page_size: int = 16,
         num_pages: Optional[int] = None,
         seed: int = 0,
+        obs=None,
     ):
         self.cfg = cfg
+        # telemetry registry (see docs/OBSERVABILITY.md): None → REPRO_OBS
+        # env, True → fresh Registry, False → no-op.  Purely additive —
+        # admission order, sampling, and page accounting are unchanged.
+        self.obs = obsm.resolve(obs)
         self.model = LM(cfg)
         self.params = params
         self.max_batch = max_batch
@@ -88,6 +95,8 @@ class ServingEngine:
     def submit(self, req: Request) -> None:
         assert req.prompt.ndim >= 1 and len(req.prompt) >= 1
         assert len(req.prompt) + req.max_new_tokens <= self.max_len
+        req.submit_tick = self.ticks
+        self.obs.counter("serving.submitted")
         self.queue.append(req)
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, Request]:
@@ -99,6 +108,17 @@ class ServingEngine:
 
     # -- one engine tick -----------------------------------------------------
     def tick(self) -> None:
+        reg = self.obs
+        if reg.enabled:
+            reg.hist("serving.queue_depth", len(self.queue))
+            reg.gauge(
+                "serving.active_slots",
+                sum(1 for s in self.slots if s is not None),
+            )
+        with reg.span("serving.tick"):
+            self._tick()
+
+    def _tick(self) -> None:
         pos = int(self.cache["len"])
         # timeline compaction: the shared position axis only grows; once every
         # slot is idle, restart it so long request streams drain on a bounded
@@ -126,6 +146,12 @@ class ServingEngine:
             self.queue.pop(0)
             self._admit(slot, req, pos)
             admit[req.id] = len(req.prompt)
+            if self.obs.enabled and req.submit_tick >= 0:
+                # admission latency in engine ticks (deterministic, unlike
+                # wall clock): how long the request sat head-of-line
+                self.obs.hist(
+                    "serving.admission_wait_ticks", self.ticks - req.submit_tick
+                )
 
         # build this tick's forced/sampled token per active slot
         tok_shape = (
@@ -166,6 +192,7 @@ class ServingEngine:
                     finish.append(req.id)
                     self.finished[req.id] = req
                     self.slots[slot] = None
+                    self.obs.counter("serving.finished")
                 else:
                     extend.append(req.id)
 

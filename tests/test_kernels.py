@@ -178,7 +178,7 @@ def test_hash_probe_sweep(cap, n):
     present = jnp.asarray(
         rng.choice(10_000, size=cap // 4, replace=False).astype(np.int32)
     )
-    table, _, over = claim_vertex_slots(table, present, jnp.ones((cap // 4,), bool))
+    table, _, over, _ = claim_vertex_slots(table, present, jnp.ones((cap // 4,), bool))
     assert not bool(over)
 
     # queries: half present, half absent

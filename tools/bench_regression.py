@@ -1,23 +1,32 @@
 """Maintenance-benchmark regression gate.
 
 Compares the current run's ``BENCH_maintenance.json`` against a baseline
-file (the previous CI run's artifact) and fails on a >25% ``snap_ms``
-slowdown in any **host-oracle** maintenance row — the deterministic numpy
-paths (``delta_host``, ``rehash_host``) whose cost is dominated by
-algorithmic work, not device dispatch, so a sustained slowdown there is a
-real complexity regression rather than scheduler noise.  Device/interpret
-rows are reported but never gate: their timings swing with XLA version and
-CI machine load.
+file (the previous CI run's artifact) and fails on:
+
+* a >25% ``snap_ms`` (or amortized ``us_per_query``) slowdown in any
+  **host-oracle** maintenance row — the deterministic numpy paths
+  (``delta_host``, ``rehash_host``) whose cost is dominated by algorithmic
+  work, not device dispatch, so a sustained slowdown there is a real
+  complexity regression rather than scheduler noise.  Device/interpret
+  rows are reported but never gate: their timings swing with XLA version
+  and CI machine load.
+* a >0.10 **absolute** drop in ``fastpath_frac`` — the obs-derived
+  fraction of build ops the FPSP engine resolved on its fast (sort-free)
+  lane (``docs/OBSERVABILITY.md``).  The build streams are seeded, so this
+  column is deterministic per row; a drop means the conflict mask got
+  pessimistic (ops needlessly demoted to the slow path), which is a
+  functional regression the timing columns can hide on fast machines.
 
 Rows are keyed by ``(impl, build, graph_size, batch, n_shards)``; keys
 present in only one file are reported and skipped (the benchmark matrix is
-allowed to evolve).  A missing or unreadable baseline exits 0 — the first
-run after this gate lands, a matrix change, or an expired artifact must
-not block CI.
+allowed to evolve), and rows whose baseline predates a column (e.g.
+``fastpath_frac`` before the obs PR) skip that column's gate.  A missing
+or unreadable baseline exits 0 — the first run after this gate lands, a
+matrix change, or an expired artifact must not block CI.
 
 Usage:
     python tools/bench_regression.py BASELINE.json CURRENT.json \
-        [--threshold 0.25]
+        [--threshold 0.25] [--fastpath-drop 0.10]
 """
 
 from __future__ import annotations
@@ -29,8 +38,9 @@ from pathlib import Path
 
 # the host-oracle rows: deterministic numpy work, meaningful to gate on
 GATED_IMPLS = ("delta_host", "rehash_host")
-# below this absolute cost, ratios are mostly timer noise on shared runners
+# below these absolute costs, ratios are mostly timer noise on shared runners
 MIN_GATED_MS = 0.25
+MIN_GATED_US = 1.0
 
 
 def _load_rows(path: Path):
@@ -45,8 +55,27 @@ def _load_rows(path: Path):
             r.get("batch", 0),
             r.get("n_shards", 1),
         )
-        out[key] = float(r["snap_ms"])
+        out[key] = r
     return out
+
+
+def _ratio_gate(key, base_row, cur_row, field, floor, threshold, failures):
+    """Slowdown gate on one timing column; returns 1 if the row gated."""
+    b = base_row.get(field)
+    c = cur_row.get(field)
+    if b is None or c is None:
+        return 0
+    b, c = float(b), float(c)
+    ratio = c / b if b > 0 else float("inf")
+    gated = key[0] in GATED_IMPLS and max(b, c) >= floor
+    tag = "GATE" if gated else "info"
+    print(f"[{tag}] {key} {field}: {b:.3f} -> {c:.3f} ({ratio:.2f}x)")
+    if gated and ratio > 1.0 + threshold:
+        failures.append(
+            (key, field, f"{b:.3f} -> {c:.3f} ({ratio:.2f}x > "
+             f"{1 + threshold:.2f}x allowed)")
+        )
+    return 1 if gated else 0
 
 
 def main(argv=None) -> int:
@@ -55,6 +84,9 @@ def main(argv=None) -> int:
     ap.add_argument("current", type=Path)
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max tolerated fractional slowdown (default 0.25)")
+    ap.add_argument("--fastpath-drop", type=float, default=0.10,
+                    help="max tolerated absolute fastpath_frac drop "
+                         "(default 0.10)")
     args = ap.parse_args(argv)
 
     try:
@@ -71,31 +103,42 @@ def main(argv=None) -> int:
     failures = []
     compared = 0
     for key in sorted(set(base) | set(cur)):
-        impl = key[0]
         if key not in base or key not in cur:
-            where = "baseline" if key not in base else "current"
-            print(f"skip (only in {'current' if where == 'baseline' else 'baseline'}): {key}")
+            where = "current" if key not in base else "baseline"
+            print(f"skip (only in {where}): {key}")
             continue
-        b, c = base[key], cur[key]
-        ratio = c / b if b > 0 else float("inf")
-        gated = impl in GATED_IMPLS and max(b, c) >= MIN_GATED_MS
-        tag = "GATE" if gated else "info"
-        print(f"[{tag}] {key}: {b:.3f} ms -> {c:.3f} ms ({ratio:.2f}x)")
-        if gated:
+        br, cr = base[key], cur[key]
+        compared += _ratio_gate(
+            key, br, cr, "snap_ms", MIN_GATED_MS, args.threshold, failures
+        )
+        compared += _ratio_gate(
+            key, br, cr, "us_per_query", MIN_GATED_US, args.threshold, failures
+        )
+        # fastpath_frac: absolute-drop gate, on every row that has it in
+        # both files (None / absent — non-FPSP builds, pre-obs baselines —
+        # skips the gate for that row)
+        bf, cf = br.get("fastpath_frac"), cr.get("fastpath_frac")
+        if bf is not None and cf is not None:
             compared += 1
-            if ratio > 1.0 + args.threshold:
-                failures.append((key, b, c, ratio))
+            drop = float(bf) - float(cf)
+            tag = "GATE"
+            print(f"[{tag}] {key} fastpath_frac: {float(bf):.4f} -> "
+                  f"{float(cf):.4f} (drop {drop:+.4f})")
+            if drop > args.fastpath_drop:
+                failures.append(
+                    (key, "fastpath_frac",
+                     f"{float(bf):.4f} -> {float(cf):.4f} (drop {drop:.4f} > "
+                     f"{args.fastpath_drop:.2f} allowed)")
+                )
 
     if not compared:
-        print("no gated host-oracle rows in common; nothing to compare")
+        print("no gated rows in common; nothing to compare")
         return 0
-    for key, b, c, ratio in failures:
-        print(f"::error::maintenance regression {key}: "
-              f"{b:.3f} ms -> {c:.3f} ms ({ratio:.2f}x > "
-              f"{1 + args.threshold:.2f}x allowed)")
+    for key, field, msg in failures:
+        print(f"::error::bench regression {key} {field}: {msg}")
     if not failures:
-        print(f"bench regression gate OK ({compared} host-oracle rows within "
-              f"{args.threshold:.0%})")
+        print(f"bench regression gate OK ({compared} gated comparisons within "
+              f"bounds)")
     return 1 if failures else 0
 
 

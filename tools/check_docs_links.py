@@ -23,7 +23,11 @@ ROOT = Path(__file__).resolve().parent.parent
 LINK_RE = re.compile(r"\]\(([^)\s]+)\)")
 SCHEMES = ("http://", "https://", "mailto:")
 
-REQUIRED_IN_README = ("docs/ARCHITECTURE.md", "docs/KERNELS.md")
+REQUIRED_IN_README = (
+    "docs/ARCHITECTURE.md",
+    "docs/KERNELS.md",
+    "docs/OBSERVABILITY.md",
+)
 
 
 def check_file(md: Path) -> list[str]:
